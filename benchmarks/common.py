@@ -1,0 +1,54 @@
+"""Shared benchmark utilities: wall-clock timing + GEMM/FLOP accounting.
+
+This container is CPU-only, so each benchmark reports BOTH:
+  * wall-clock per call (honest CPU number, jit-warmed, blocked), and
+  * algorithmic quantities that transfer to accelerators — iteration
+    counts to tolerance and GEMM-FLOPs to tolerance (the paper's own
+    speed metric is GPU time, which is GEMM-dominated; FLOPs-to-converge
+    is the hardware-independent version of the same comparison).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict
+
+import jax
+import numpy as np
+
+RESULTS = []
+
+
+def time_call(fn: Callable, *args, repeats: int = 3, warmup: int = 1):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, us_per_call: float, **derived):
+    kv = ";".join(f"{k}={v}" for k, v in derived.items())
+    line = f"{name},{us_per_call:.1f},{kv}"
+    RESULTS.append(line)
+    print(line, flush=True)
+
+
+def iters_to_tol(residuals, n: int, tol: float = 1e-3) -> int:
+    r = np.asarray(residuals, dtype=np.float64) / np.sqrt(n)
+    hit = np.nonzero(r < tol)[0]
+    return int(hit[0]) + 1 if hit.size else len(r)
+
+
+# GEMM-FLOP models per iteration (m x n input, n <= m), fp accounting
+def flops_per_iter(method: str, m: int, n: int, sketch_dim: int = 8,
+                   degree: int = 2) -> float:
+    """Polar-factor iteration cost: all methods are 3 GEMMs of ~2mn^2;
+    PRISM adds the sketched trace chain (4d+2 products of n x n @ n x p)
+    and PolarExpress is identical to classical NS-5 in structure."""
+    base = 3 * 2.0 * m * n * n
+    if method == "prism":
+        base += (4 * degree + 2) * 2.0 * n * n * sketch_dim
+    return base

@@ -1,0 +1,71 @@
+"""Paper Fig. 1: speedup over classical Newton-Schulz as sigma_min varies.
+
+PolarExpress is optimized for sigma in [1e-3, 1] (hence [1e-6, 1] on the
+square-root problem); PRISM assumes nothing.  We sweep sigma_min over
+[1e-12, 1/2], run every method to convergence, and report the speedup in
+GEMM-FLOPs-to-tolerance (the hardware-independent version of the paper's
+GPU-time speedup) plus CPU wall time per call at a fixed iteration count.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, flops_per_iter, iters_to_tol, time_call
+from repro.config import PrismConfig
+from repro.core import matfn
+from repro.core import random_matrices as rm
+
+N, M = 256, 256
+MAX_ITERS = 60
+CFG = PrismConfig(degree=2, sketch_dim=8)
+
+
+def _flops_to_tol(method, info_res, n, m):
+    it = iters_to_tol(info_res, n)
+    per = flops_per_iter("prism" if method == "prism" else "other", m, n)
+    return it, it * per
+
+
+def run():
+    key = jax.random.PRNGKey(42)
+    for smin in [1e-12, 1e-9, 1e-6, 1e-3, 1e-1, 0.5]:
+        A = rm.log_uniform_spectrum(key, M, N, smin)
+        # --- polar factor
+        _, ip = matfn.polar(A, method="prism", cfg=CFG, key=key,
+                            iters=MAX_ITERS, return_info=True)
+        _, ic = matfn.polar(A, method="newton_schulz", cfg=CFG,
+                            iters=MAX_ITERS, return_info=True)
+        _, fpe = matfn.polar(A, method="polar_express", iters=MAX_ITERS,
+                             return_info=True)
+        itp, fp_ = _flops_to_tol("prism", ip.residual_fro, N, M)
+        itc, fc = _flops_to_tol("c", ic.residual_fro, N, M)
+        itpe, fpe_ = _flops_to_tol("pe", fpe, N, M)
+        wall = time_call(
+            jax.jit(lambda A: matfn.polar(A, method="prism", cfg=CFG,
+                                          key=key, iters=10)), A)
+        emit(f"fig1_polar_smin{smin:g}", wall * 1e6 / 10,
+             iters_prism=itp, iters_ns=itc, iters_pe=itpe,
+             speedup_prism_vs_ns=round(fc / fp_, 2),
+             speedup_pe_vs_ns=round(fc / fpe_, 2))
+        # --- square root (spectrum on eigenvalues => sigma_min^2 regime)
+        S = rm.spd_with_eigs(key, N, jnp.exp(jnp.linspace(
+            np.log(smin), 0.0, N)))
+        (_, _), isp = matfn.sqrtm(S, method="prism", cfg=CFG, key=key,
+                                  iters=MAX_ITERS, return_info=True)
+        (_, _), isc = matfn.sqrtm(S, method="newton_schulz", cfg=CFG,
+                                  iters=MAX_ITERS, return_info=True)
+        (_, _), ispe = matfn.sqrtm(S, method="polar_express",
+                                   iters=MAX_ITERS, return_info=True)
+        itp, fp_ = _flops_to_tol("prism", isp.residual_fro, N, N)
+        itc, fc = _flops_to_tol("c", isc.residual_fro, N, N)
+        itpe, fpe_ = _flops_to_tol("pe", ispe, N, N)
+        emit(f"fig1_sqrt_smin{smin:g}", 0.0,
+             iters_prism=itp, iters_ns=itc, iters_pe=itpe,
+             speedup_prism_vs_ns=round(fc / fp_, 2),
+             speedup_pe_vs_ns=round(fc / fpe_, 2))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Paper Fig. 3 / D.1: degree-5 polar methods on Gaussian matrices with
+aspect ratios gamma in {1, 4, 50}; convergence of ||I - X^T X||_F and the
+PRISM alpha_k trajectory."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, flops_per_iter, iters_to_tol, time_call
+from repro.config import PrismConfig
+from repro.core import matfn
+from repro.core import random_matrices as rm
+
+CFG = PrismConfig(degree=2, sketch_dim=8)
+MAX_ITERS = 25
+
+
+def run():
+    key = jax.random.PRNGKey(7)
+    M_BASE = 400
+    for gamma in [1, 4, 50]:
+        n = max(M_BASE // gamma, 8)
+        m = n * gamma
+        A = rm.gaussian(key, m, n)
+        _, ip = matfn.polar(A, method="prism", cfg=CFG, key=key,
+                            iters=MAX_ITERS, return_info=True)
+        _, ic = matfn.polar(A, method="newton_schulz", cfg=CFG,
+                            iters=MAX_ITERS, return_info=True)
+        _, fpe = matfn.polar(A, method="polar_express", iters=MAX_ITERS,
+                             return_info=True)
+        itp = iters_to_tol(ip.residual_fro, n)
+        itc = iters_to_tol(ic.residual_fro, n)
+        itpe = iters_to_tol(fpe, n)
+        alphas = np.asarray(ip.alphas)[:, ...].reshape(MAX_ITERS)
+        wall = time_call(
+            jax.jit(lambda A: matfn.polar(A, method="prism", cfg=CFG,
+                                          key=key, iters=10)), A)
+        emit(f"fig3_gaussian_gamma{gamma}", wall * 1e6 / 10,
+             iters_prism=itp, iters_ns=itc, iters_pe=itpe,
+             flops_speedup_vs_ns=round(
+                 itc * flops_per_iter("ns", m, n)
+                 / (itp * flops_per_iter("prism", m, n)), 2),
+             alpha_first=round(float(alphas[0]), 3),
+             alpha_last=round(float(alphas[-1]), 3),
+             final_res=float(np.asarray(ip.residual_fro)[-1]))
+
+
+if __name__ == "__main__":
+    run()

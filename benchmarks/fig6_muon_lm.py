@@ -1,0 +1,86 @@
+"""Paper Fig. 6: Muon-trained LM — PolarExpress vs PRISM-5 vs PRISM-3 vs
+AdamW.
+
+CPU-scaled version of the paper's GPT-2 run (10L/1024d on FineWeb): a
+4-layer/256d model of the same family trained on the synthetic bigram
+stream (learnable structure), same iteration budgets as the paper (5 for
+PolarExpress & PRISM-3, 3 for PRISM-5; warm alpha for the first 3 iters,
+per paper App. C).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.config import OptimizerConfig, PrismConfig
+from repro.configs import get_config
+from repro.data import DataConfig, make_batch_fn
+from repro.models import build
+from repro.optim import base, make_optimizer
+
+STEPS = 40
+
+
+def _train(tag, ocfg, seed=0):
+    cfg = get_config("gpt2-paper").replace(
+        num_layers=4, d_model=256, num_heads=8, num_kv_heads=8, head_dim=32,
+        d_ff=1024, vocab_size=2048, dtype="float32", emb_dtype="float32")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    opt = make_optimizer(ocfg, model.logical_axes())
+    state = opt.init(params)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=128,
+                      global_batch=16, markov_rank=32)
+    batch_fn = make_batch_fn(cfg, dcfg)
+
+    @jax.jit
+    def step_fn(params, state, step):
+        batch = batch_fn(step)
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: model.loss(p, batch), has_aux=True)(params)
+        grads, _ = base.clip_by_global_norm(grads, 1.0)
+        params, state = opt.update(grads, state, params, step,
+                                   jax.random.fold_in(
+                                       jax.random.PRNGKey(3), step))
+        return params, state, loss
+
+    losses = []
+    t0 = None
+    for t in range(STEPS):
+        params, state, loss = step_fn(params, state, jnp.asarray(t))
+        jax.block_until_ready(loss)
+        if t == 0:
+            t0 = time.perf_counter()
+        losses.append(float(loss))
+    wall = (time.perf_counter() - t0) / (STEPS - 1)
+    return losses, wall
+
+
+def run():
+    pe = OptimizerConfig(name="muon", learning_rate=6e-3, momentum=0.95,
+                         weight_decay=0.01, matfn_method="polar_express",
+                         prism=PrismConfig(iterations=5))
+    p5 = OptimizerConfig(name="muon", learning_rate=6e-3, momentum=0.95,
+                         weight_decay=0.01, matfn_method="prism",
+                         prism=PrismConfig(degree=2, iterations=3,
+                                           warm_alpha_iters=3, sketch_dim=8))
+    p3 = OptimizerConfig(name="muon", learning_rate=6e-3, momentum=0.95,
+                         weight_decay=0.01, matfn_method="prism",
+                         prism=PrismConfig(degree=1, iterations=5,
+                                           warm_alpha_iters=3, sketch_dim=8))
+    adamw = OptimizerConfig(name="adamw", learning_rate=3e-4,
+                            weight_decay=0.1)
+    for tag, ocfg in [("polar_express", pe), ("prism5", p5),
+                      ("prism3", p3), ("adamw", adamw)]:
+        losses, wall = _train(tag, ocfg)
+        emit(f"fig6_muon_{tag}", wall * 1e6,
+             loss_step10=round(losses[10], 4),
+             loss_step25=round(losses[25], 4),
+             loss_final=round(losses[-1], 4))
+
+
+if __name__ == "__main__":
+    run()

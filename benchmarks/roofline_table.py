@@ -1,0 +1,35 @@
+"""§Roofline table: read results/dryrun/*.json and print one CSV row per
+(arch x shape x mesh) cell with the three roofline terms."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def run(out_dir: str = "results/dryrun"):
+    files = sorted(glob.glob(os.path.join(out_dir, "*.json")))
+    if not files:
+        print(f"(no dry-run records in {out_dir}; run "
+              f"`python -m repro.launch.dryrun --all --both_meshes` first)")
+        return
+    for f in files:
+        rec = json.load(open(f))
+        tag = f"roofline_{rec['arch']}_{rec['shape']}_{rec['mesh']}"
+        if "error" in rec:
+            emit(tag, 0.0, status="FAIL", error=rec["error"][:80])
+            continue
+        r = rec["roofline"]
+        emit(tag, rec["compile_s"] * 1e6,
+             compute_s=f"{r['compute_s']:.3f}",
+             memory_s=f"{r['memory_s']:.3f}",
+             collective_s=f"{r['collective_s']:.3f}",
+             dominant=r["dominant"],
+             useful_flops=f"{r['useful_flops_fraction']:.3f}",
+             roofline=f"{r['roofline_fraction']:.4f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Benchmark runner — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (benchmarks.common.emit).
+"""
+from __future__ import annotations
+
+import time
+
+
+def main() -> None:
+    from benchmarks import (fig1_sigma_sweep, fig3_gaussian, fig4_htmp,
+                            fig5_shampoo, fig6_muon_lm, figd3_sqrt,
+                            figd5_newton, roofline_table)
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for mod in [fig1_sigma_sweep, fig3_gaussian, fig4_htmp, figd3_sqrt,
+                figd5_newton, fig5_shampoo, fig6_muon_lm, roofline_table]:
+        name = mod.__name__.split(".")[-1]
+        print(f"# --- {name} ---", flush=True)
+        try:
+            mod.run()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},0.0,status=ERROR;err={type(e).__name__}:{e}",
+                  flush=True)
+    print(f"# total {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Example 4: Shampoo with PRISM inverse roots on a vision-style task
+(the paper's Fig. 5 setting, CPU-scaled).
+
+    PYTHONPATH=src python examples/shampoo_vision.py
+
+Compares eigendecomposition vs PolarExpress vs PRISM as the inverse-root
+backend inside the *same* Shampoo optimizer on synthetic CIFAR-shaped
+data, printing loss trajectories and per-step wall time.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from benchmarks import fig5_shampoo
+
+if __name__ == "__main__":
+    fig5_shampoo.run()

@@ -1,0 +1,3 @@
+from repro.analysis import hlo, roofline
+
+__all__ = ["hlo", "roofline"]

@@ -1,0 +1,101 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+TPU v5e hardware constants (per chip):
+  peak bf16 compute   197 TFLOP/s
+  HBM bandwidth       819 GB/s
+  ICI bandwidth       ~50 GB/s per link (we charge the ring estimate
+                      against one link's bandwidth — conservative)
+
+Terms, all in seconds per step (chips = mesh size):
+  compute    = HLO_FLOPs / (chips * peak)
+  memory     = HLO_bytes / (chips * hbm_bw)
+  collective = wire_bytes_per_chip / ici_bw
+
+cost_analysis() on the CPU backend reports whole-module (per-device
+partitioned program) flops/bytes — i.e. per-chip numbers — so `chips`
+division is already baked in; we detect that by construction: flops from
+the partitioned module are per-device, hence compute = flops / peak.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+
+
+@dataclass
+class Roofline:
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    wire_bytes_per_chip: float
+    model_flops_global: float = 0.0
+    chips: int = 256
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes_per_chip / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.wire_bytes_per_chip / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Perfect-overlap lower bound: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (remat/redundancy waste detector)."""
+        total = self.flops_per_chip * self.chips
+        return self.model_flops_global / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved at the perfect-overlap
+        step time, counting only MODEL_FLOPS as useful."""
+        t = self.step_time_s
+        if t <= 0:
+            return 0.0
+        return (self.model_flops_global / (self.chips * PEAK_FLOPS)) / t
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops_per_chip": self.flops_per_chip,
+            "hbm_bytes_per_chip": self.hbm_bytes_per_chip,
+            "wire_bytes_per_chip": self.wire_bytes_per_chip,
+            "model_flops_global": self.model_flops_global,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "step_time_lower_bound_s": self.step_time_s,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops(n_params: float, tokens: float, kind: str,
+                n_active: Optional[float] = None) -> float:
+    """6 N D for training; 2 N_active per generated token for decode;
+    2 N D for prefill (forward only)."""
+    n = n_active if n_active is not None else n_params
+    if kind == "train":
+        return 6.0 * n * tokens
+    if kind == "prefill":
+        return 2.0 * n * tokens
+    return 2.0 * n * tokens  # decode: tokens = batch (1 new token each)

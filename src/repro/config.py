@@ -1,0 +1,238 @@
+"""Central configuration dataclasses for the repro framework.
+
+Everything is a plain frozen dataclass so configs hash/compare cleanly and
+can be used as jit static arguments.  Architecture files under
+``repro/configs`` construct ``ModelConfig`` instances; the launcher layers
+``MeshConfig``/``TrainConfig`` on top.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+# ---------------------------------------------------------------------------
+# PRISM
+
+
+@dataclass(frozen=True)
+class PrismConfig:
+    """Configuration of the PRISM matrix-function engine.
+
+    Attributes:
+      degree: d in g_d(xi; alpha) = f_{d-1}(xi) + alpha xi^d.  degree=1 is
+        the 3rd-order Newton-Schulz family, degree=2 the 5th-order family.
+      sketch_dim: rows p of the Gaussian OSE sketch S in R^{p x n}.  The
+        paper observes p as small as 5 suffices; we default to 8 (padded to
+        a TPU lane multiple inside the kernel).
+      iterations: fixed iteration count when run inside jit (Muon/Shampoo).
+      warm_alpha_iters: use alpha = u (the upper constraint) for this many
+        initial iterations instead of fitting (paper Sec. C efficiency
+        trick; preserves the quadratic-convergence guarantee by Lemma B.1).
+      alpha_bounds: override [l, u]; None selects the paper's defaults
+        ([1/2, 1] for d=1, [3/8, 29/20] for d=2).
+      use_kernels: route GEMM hot spots through the Pallas kernels (TPU);
+        False uses pure-jnp reference paths (CPU tests, oracles).
+    """
+
+    degree: int = 2
+    sketch_dim: int = 8
+    iterations: int = 5
+    warm_alpha_iters: int = 0
+    alpha_bounds: Optional[Tuple[float, float]] = None
+    use_kernels: bool = False
+    dtype: str = "float32"
+
+    @property
+    def bounds(self) -> Tuple[float, float]:
+        if self.alpha_bounds is not None:
+            return self.alpha_bounds
+        return {1: (0.5, 1.0), 2: (3.0 / 8.0, 29.0 / 20.0)}[self.degree]
+
+
+# ---------------------------------------------------------------------------
+# Model
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 8
+    num_experts_per_tok: int = 2
+    # "expert": shard expert dim over the model axis (EP);
+    # "tensor": shard each expert's hidden dim over the model axis (TP).
+    sharding: str = "expert"
+    router_aux_loss_coef: float = 0.01
+    # per-expert slot budget C = ceil(k*T/E * capacity_factor); tokens over
+    # budget are dropped (standard Switch/GShard semantics).  Set to
+    # num_experts for drop-free routing (exact but unbalanced memory).
+    capacity_factor: float = 1.25
+    # "global": one dispatch over all B*S tokens (baseline; the gather
+    # crosses data shards -> all-gathers of the token stream).
+    # "per_sample": dispatch within each sequence -> gathers stay local to
+    # the batch shard (§Perf MoE iteration); capacity is per sample.
+    dispatch: str = "global"
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 16
+    conv_dim: int = 4
+    expand: int = 2
+    dt_rank: int = 0  # 0 => ceil(d_model / 16)
+
+
+@dataclass(frozen=True)
+class RGLRUConfig:
+    """RecurrentGemma recurrent-block config (RG-LRU + local attention)."""
+
+    lru_width: int = 0          # 0 => d_model
+    conv_dim: int = 4
+    attention_window: int = 2048
+    # block pattern period: `pattern` entries cycle over layers
+    pattern: Tuple[str, ...] = ("recurrent", "recurrent", "attention")
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"  # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int = 12
+    d_model: int = 768
+    num_heads: int = 12
+    num_kv_heads: int = 12
+    head_dim: int = 0  # 0 => d_model // num_heads
+    d_ff: int = 3072
+    vocab_size: int = 50257
+    max_seq_len: int = 8192
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    mlp_act: str = "silu"  # silu (SwiGLU) | gelu
+    sliding_window: int = 0  # 0 => full causal attention
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    # audio (decoder over EnCodec tokens)
+    num_codebooks: int = 0  # 0 => ordinary single-vocab LM
+    # vlm (stub frontend): number of precomputed patch embeddings prepended
+    num_patches: int = 0
+    vision_dim: int = 1152  # dim of the (stubbed) precomputed patch embeds
+    logits_softcap: float = 0.0
+    scale_embeddings: bool = False  # gemma-style sqrt(d_model) embed scale
+    emb_dtype: str = "bfloat16"
+    dtype: str = "bfloat16"
+    remat: str = "block"  # none | block (checkpoint each scanned block)
+    scan_layers: bool = True
+    # seq-chunk size for the chunked CE loss; larger chunks amortize the
+    # LM-head all-gather across more tokens (ZeRO-3; §Perf iteration 4)
+    loss_chunk: int = 512
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def subquadratic(self) -> bool:
+        """True if serving memory does not grow with full seq_len attention."""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        return self.sliding_window > 0
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "muon"  # muon | shampoo | adamw
+    learning_rate: float = 6e-3
+    weight_decay: float = 0.01
+    momentum: float = 0.95
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    # muon
+    matfn_method: str = "prism"  # prism | polar_express | newton_schulz | eigh
+    prism: PrismConfig = field(default_factory=lambda: PrismConfig(
+        degree=2, iterations=3, warm_alpha_iters=3))
+    adamw_lr_scale: float = 0.05   # lr scale for non-matrix params under muon
+    # shampoo
+    precondition_every: int = 1
+    max_precond_dim: int = 2048
+    shampoo_eps: float = 1e-6
+    grad_clip_norm: float = 1.0
+    # distributed tricks
+    gradient_compression: str = "none"  # none | int8
+    # "bfloat16": differentiate wrt the bf16 compute params so the data-
+    # parallel gradient reduction moves bf16 on the wire (fp32 master
+    # update unchanged); "float32": reduce in fp32 (baseline).
+    grads_dtype: str = "float32"
+    # reshard stacked momentum matrices to (layers->model, rows->data)
+    # before the polar iteration: Newton-Schulz runs with one small R-psum
+    # instead of full cross-mesh GEMM collectives (§Perf iteration 3).
+    muon_local_reshard: bool = False
+
+
+# ---------------------------------------------------------------------------
+# Mesh / shapes / training
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    multi_pod: bool = False
+    data_axis: int = 16
+    model_axis: int = 16
+    num_pods: int = 2
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        if self.multi_pod:
+            return (self.num_pods, self.data_axis, self.model_axis)
+        return (self.data_axis, self.model_axis)
+
+    @property
+    def axis_names(self) -> Tuple[str, ...]:
+        if self.multi_pod:
+            return ("pod", "data", "model")
+        return ("data", "model")
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned (input-shape) cell."""
+
+    name: str = "train_4k"
+    seq_len: int = 4096
+    global_batch: int = 256
+    kind: str = "train"  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 100
+    log_every: int = 10
+    checkpoint_every: int = 50
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    async_checkpoint: bool = True
+    seed: int = 0
+    straggler_slack: float = 3.0  # flag steps slower than slack x median
+    keep_checkpoints: int = 3

@@ -1,0 +1,3 @@
+from repro.configs.registry import arch_ids, get_config, get_smoke_config
+
+__all__ = ["arch_ids", "get_config", "get_smoke_config"]

@@ -1,0 +1,12 @@
+"""PRISM core: distribution-free adaptive matrix-function computation."""
+from repro.core import (chebyshev, inverse_newton, matfn, newton,
+                        newton_schulz, polar_express, polynomials,
+                        random_matrices, sketch)
+from repro.core.matfn import inv, inv_proot, inv_sqrtm, polar, signm, sqrtm
+from repro.core.prism import fit_alpha
+
+__all__ = [
+    "chebyshev", "inverse_newton", "matfn", "newton", "newton_schulz",
+    "polar_express", "polynomials", "random_matrices", "sketch",
+    "inv", "inv_proot", "inv_sqrtm", "polar", "signm", "sqrtm", "fit_alpha",
+]

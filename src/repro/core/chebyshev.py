@@ -1,0 +1,55 @@
+"""Chebyshev iteration for the matrix inverse (paper App. A.4).
+
+  X_0 = A^T / ||A||_F^2-free normalization (we scale A by ||A||_F first),
+  R_k = I - A X_k,
+  X_{k+1} = X_k (I + R_k + a_k R_k^2).
+
+Classical Chebyshev is a_k = 1; PRISM fits a_k over [1/2, 2] by minimizing
+||S (R^2 - a (R^2 - R^3))||_F^2, a closed-form quadratic in a.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import polynomials as poly
+from repro.core import prism
+from repro.core.newton_schulz import IterInfo, _fro
+
+
+def inv(A: jax.Array, iters: int = 20, method: str = "prism",
+        sketch_dim: int = 8, key: Optional[jax.Array] = None,
+        dtype=jnp.float32, alpha_bounds=(0.5, 2.0),
+        return_info: bool = False):
+    """A^{-1} for full-rank square A via (PRISM-)Chebyshev iteration."""
+    in_dtype = A.dtype
+    n = A.shape[-1]
+    c = _fro(A).astype(dtype)
+    Ah = A.astype(dtype) / c
+    X = jnp.swapaxes(Ah, -1, -2)
+    eye = jnp.eye(n, dtype=dtype)
+    apoly = poly.chebyshev_residual()
+    alphas, fros = [], []
+    for k in range(iters):
+        R = eye - Ah @ X
+        if method == "prism":
+            # R = I - A X is NOT symmetric in general; the trace machinery
+            # needs symmetric R, which holds here because X_0 = A^T makes
+            # every X_k a polynomial in A^T A times A^T => A X_k symmetric.
+            kk = prism.alpha_schedule_key(key, k) if key is not None else None
+            a = prism.fit_alpha(R, apoly, *alpha_bounds, key=kk,
+                                sketch_dim=sketch_dim)
+        else:
+            a = jnp.full(A.shape[:-2], 1.0, dtype=jnp.float32)
+        if return_info:
+            alphas.append(a)
+            fros.append(_fro(R)[..., 0, 0])
+        ab = a.astype(dtype)[..., None, None]
+        XR = X @ R
+        X = X + XR + ab * (XR @ R)
+    out = (X / c).astype(in_dtype)
+    if return_info:
+        return out, IterInfo(jnp.stack(alphas), jnp.stack(fros))
+    return out

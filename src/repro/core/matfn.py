@@ -1,0 +1,108 @@
+"""Unified matrix-function API — the framework's public primitive layer.
+
+Every consumer (Muon, Shampoo, examples, benchmarks) goes through these
+entry points; ``method`` selects the algorithm:
+
+  polar:     prism | newton_schulz | polar_express | svd
+  sqrtm:     prism | newton_schulz | polar_express | newton(DB) | eigh
+  inv_sqrtm: same as sqrtm (coupled Y output) + inverse_newton
+  signm:     prism | newton_schulz | eigh
+  inv:       prism_chebyshev | chebyshev | inverse_newton | solve
+  inv_proot: prism | inverse_newton | eigh
+
+"prism" methods adapt alpha per iteration from the sketched spectrum —
+distribution-free, no sigma_min estimate — per the paper.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import PrismConfig
+from repro.core import chebyshev as _cheb
+from repro.core import inverse_newton as _invnewton
+from repro.core import newton as _newton
+from repro.core import newton_schulz as _ns
+from repro.core import polar_express as _pe
+
+_DEF = PrismConfig()
+
+
+def polar(A: jax.Array, method: str = "prism", cfg: PrismConfig = _DEF,
+          iters: Optional[int] = None, key: Optional[jax.Array] = None,
+          **kw):
+    """Polar factor U V^T (orthogonalization) of A [..., m, n]."""
+    if method == "svd":
+        U, _, Vt = jnp.linalg.svd(A, full_matrices=False)
+        return U @ Vt
+    if method == "polar_express":
+        return _pe.polar(A, iters=iters or 8, **kw)
+    return _ns.polar(A, cfg=cfg, method=method, iters=iters, key=key, **kw)
+
+
+def sqrtm(A: jax.Array, method: str = "prism", cfg: PrismConfig = _DEF,
+          iters: Optional[int] = None, key: Optional[jax.Array] = None,
+          **kw):
+    """(A^{1/2}, A^{-1/2}) for symmetric PSD A."""
+    if method == "eigh":
+        w, V = jnp.linalg.eigh(A)
+        w = jnp.maximum(w, 0.0)
+        s = jnp.sqrt(w)
+        si = jnp.where(s > 0, 1.0 / jnp.maximum(s, 1e-30), 0.0)
+        Vt = jnp.swapaxes(V, -1, -2)
+        return (V * s[..., None, :]) @ Vt, (V * si[..., None, :]) @ Vt
+    if method == "polar_express":
+        return _pe.sqrtm(A, iters=iters or 8, **kw)
+    if method == "newton":
+        return _newton.sqrtm(A, iters=iters or 12, method="prism", **kw)
+    if method == "newton_classical":
+        return _newton.sqrtm(A, iters=iters or 12, method="newton", **kw)
+    return _ns.sqrtm(A, cfg=cfg, method=method, iters=iters, key=key, **kw)
+
+
+def inv_sqrtm(A: jax.Array, method: str = "prism", **kw):
+    """A^{-1/2} for symmetric PSD A (coupled-iteration Y output)."""
+    if method == "inverse_newton":
+        return _invnewton.inv_proot(A, p=2, **kw)
+    return sqrtm(A, method=method, **kw)[1]
+
+
+def signm(A: jax.Array, method: str = "prism", cfg: PrismConfig = _DEF,
+          iters: Optional[int] = None, key: Optional[jax.Array] = None,
+          **kw):
+    """sign(A) for A with A^2 symmetric."""
+    if method == "eigh":
+        w, V = jnp.linalg.eigh(A)
+        Vt = jnp.swapaxes(V, -1, -2)
+        return (V * jnp.sign(w)[..., None, :]) @ Vt
+    return _ns.signm(A, cfg=cfg, method=method, iters=iters, key=key, **kw)
+
+
+def inv(A: jax.Array, method: str = "prism_chebyshev",
+        iters: Optional[int] = None, key: Optional[jax.Array] = None, **kw):
+    """A^{-1} for full-rank square A."""
+    if method == "solve":
+        eye = jnp.broadcast_to(jnp.eye(A.shape[-1], dtype=A.dtype), A.shape)
+        return jnp.linalg.solve(A, eye)
+    if method == "inverse_newton":
+        return _invnewton.inv_proot(A, p=1, iters=iters or 20, key=key, **kw)
+    m = "prism" if method == "prism_chebyshev" else "chebyshev"
+    return _cheb.inv(A, iters=iters or 20,
+                     method="prism" if m == "prism" else "classical",
+                     key=key, **kw)
+
+
+def inv_proot(A: jax.Array, p: int, method: str = "prism",
+              iters: Optional[int] = None, key: Optional[jax.Array] = None,
+              **kw):
+    """A^{-1/p} for SPD A."""
+    if method == "eigh":
+        w, V = jnp.linalg.eigh(A)
+        w = jnp.maximum(w, 1e-30)
+        Vt = jnp.swapaxes(V, -1, -2)
+        return (V * (w ** (-1.0 / p))[..., None, :]) @ Vt
+    meth = "prism" if method == "prism" else "classical"
+    return _invnewton.inv_proot(A, p=p, iters=iters or 20, method=meth,
+                                key=key, **kw)

@@ -1,0 +1,204 @@
+"""Newton-Schulz iterations (classical + PRISM-accelerated).
+
+Covers the paper's Table-1 rows:
+  * matrix sign                 X_{k+1} = X_k g_d(R_k; a),  R_k = I - X_k^2
+  * square / inverse sqrt       coupled (X, Y), R_k = I - X_k Y_k   (Thm 3)
+  * polar factor U V^T          R_k = I - X_k^T X_k                 (Thm 4)
+
+for d=1 (3rd order) and d=2 (5th order).  ``alpha`` per iteration is either
+the classical Taylor coefficient, a fixed warm value u (paper Sec. C), or
+the PRISM sketched fit (core/prism.py).
+
+All entry points broadcast over leading batch dims (stacked layer params)
+and are jit/vmap/grad-safe; iteration counts are static Python ints so warm
+iterations compile to zero fitting overhead.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import PrismConfig
+from repro.core import polynomials as poly
+from repro.core import prism
+
+
+class IterInfo(NamedTuple):
+    alphas: jax.Array          # [iters, ...]
+    residual_fro: jax.Array    # [iters, ...] ||R_k||_F before each update
+
+
+def _eye_like(M: jax.Array) -> jax.Array:
+    n = M.shape[-1]
+    return jnp.eye(n, dtype=M.dtype)
+
+
+def _fro(M: jax.Array) -> jax.Array:
+    return jnp.sqrt(jnp.sum(jnp.square(M.astype(jnp.float32)),
+                            axis=(-2, -1), keepdims=True))
+
+
+def _mm(A, B, use_kernels=False, alpha=1.0, C=None, beta=0.0):
+    """alpha * A @ B (+ beta * C), optionally through the Pallas kernel."""
+    if use_kernels:
+        from repro.kernels import ops as kops
+
+        return kops.matmul_add(A, B, C=C, alpha=alpha, beta=beta)
+    out = alpha * (A @ B)
+    if C is not None:
+        out = out + beta * C
+    return out
+
+
+def _gram_residual(X: jax.Array, use_kernels: bool) -> jax.Array:
+    """R = I - X^T X (symmetric; Pallas syrk kernel when enabled)."""
+    if use_kernels:
+        from repro.kernels import ops as kops
+
+        return kops.gram(X, alpha=1.0, beta=-1.0)
+    Xt = jnp.swapaxes(X, -1, -2)
+    return _eye_like(X[..., :1, :]) - Xt @ X
+
+
+def apply_g(X: jax.Array, R: jax.Array, alpha, d: int,
+            side: str = "right", use_kernels: bool = False) -> jax.Array:
+    """X @ g_d(R; alpha)  (side='right')  or  g_d(R; alpha) @ X  (side='left').
+
+    g_d(x; a) = f_{d-1}(x) + a x^d with f the Taylor series of (1-x)^{-1/2}.
+    Evaluated as a chain of d GEMMs (Horner on R), never forming g(R).
+    """
+    f = poly.taylor_inv_sqrt(d - 1)  # ascending, length d
+    alpha = jnp.asarray(alpha, X.dtype)
+    if alpha.ndim:
+        alpha = alpha[..., None, None]
+    if side == "right":
+        # X (f0 I + f1 R + ... + a R^d) = f0 X + (f1 X + (... + a X R) R) R
+        acc = alpha * X
+        for j in range(d - 1, 0, -1):
+            acc = _mm(acc, R, use_kernels, C=X, beta=float(f[j]))
+        return _mm(acc, R, use_kernels, C=X, beta=float(f[0]))
+    else:
+        acc = alpha * X
+        for j in range(d - 1, 0, -1):
+            acc = _mm(R, acc, use_kernels, C=X, beta=float(f[j]))
+        return _mm(R, acc, use_kernels, C=X, beta=float(f[0]))
+
+
+def _classical_alpha(d: int) -> float:
+    return float(poly.taylor_inv_sqrt(d)[d])
+
+
+def _resolve_alpha(k: int, R: jax.Array, cfg: PrismConfig, method: str,
+                   key: Optional[jax.Array]):
+    """Static-k alpha resolution: classical / warm / PRISM fit."""
+    lo, hi = cfg.bounds
+    if method == "newton_schulz":
+        return jnp.full(R.shape[:-2], _classical_alpha(cfg.degree),
+                        dtype=jnp.float32)
+    assert method == "prism"
+    if k < cfg.warm_alpha_iters:
+        return jnp.full(R.shape[:-2], hi, dtype=jnp.float32)
+    apoly = poly.newton_schulz_residual(cfg.degree)
+    kk = prism.alpha_schedule_key(key, k) if key is not None else None
+    return prism.fit_alpha(R, apoly, lo, hi, key=kk,
+                           sketch_dim=cfg.sketch_dim,
+                           use_kernels=cfg.use_kernels)
+
+
+# ---------------------------------------------------------------------------
+# Polar factor (orthogonalization) — the Muon primitive
+# ---------------------------------------------------------------------------
+
+
+def polar(A: jax.Array, cfg: PrismConfig = PrismConfig(),
+          method: str = "prism", iters: Optional[int] = None,
+          key: Optional[jax.Array] = None, return_info: bool = False):
+    """Polar factor U V^T of A [..., m, n] via (PRISM-)Newton-Schulz.
+
+    method: "prism" | "newton_schulz" (classical Taylor alpha).
+    """
+    iters = cfg.iterations if iters is None else iters
+    transpose = A.shape[-2] < A.shape[-1]
+    X = jnp.swapaxes(A, -1, -2) if transpose else A
+    in_dtype = X.dtype
+    X = X.astype(cfg.dtype) / _fro(X).astype(cfg.dtype)
+    alphas, fros = [], []
+    for k in range(iters):
+        R = _gram_residual(X, cfg.use_kernels)
+        a = _resolve_alpha(k, R, cfg, method, key)
+        X = apply_g(X, R, a, cfg.degree, "right", cfg.use_kernels)
+        if return_info:
+            alphas.append(a)
+            fros.append(_fro(R)[..., 0, 0])
+    X = jnp.swapaxes(X, -1, -2) if transpose else X
+    X = X.astype(in_dtype)
+    if return_info:
+        return X, IterInfo(jnp.stack(alphas), jnp.stack(fros))
+    return X
+
+
+# ---------------------------------------------------------------------------
+# Coupled square root / inverse square root (Higham Thm 3)
+# ---------------------------------------------------------------------------
+
+
+def sqrtm(A: jax.Array, cfg: PrismConfig = PrismConfig(),
+          method: str = "prism", iters: Optional[int] = None,
+          key: Optional[jax.Array] = None, return_info: bool = False):
+    """(A^{1/2}, A^{-1/2}) for symmetric PSD A via coupled (PRISM-)NS.
+
+    Normalizes by ||A||_F (so spectrum in (0, 1]) and rescales the outputs.
+    """
+    iters = cfg.iterations if iters is None else iters
+    in_dtype = A.dtype
+    c = _fro(A).astype(cfg.dtype)
+    X = A.astype(cfg.dtype) / c
+    Y = jnp.broadcast_to(_eye_like(X), X.shape)
+    alphas, fros = [], []
+    for k in range(iters):
+        # R = I - Y X (Thm 3 coupling: X <- X h(YX), Y <- h(YX) Y).  This is
+        # Higham's numerically *stable* coupled form; the R = I - X Y variant
+        # written in the paper's Table-1 "Residual" column is the classically
+        # unstable coupling and diverges right after convergence (verified
+        # empirically in fp64 — see tests/test_matfn.py::test_sqrt_stability).
+        R = _eye_like(X) - _mm(Y, X, cfg.use_kernels)
+        R = 0.5 * (R + jnp.swapaxes(R, -1, -2))  # stability: re-symmetrize
+        a = _resolve_alpha(k, R, cfg, method, key)
+        X = apply_g(X, R, a, cfg.degree, "right", cfg.use_kernels)
+        Y = apply_g(Y, R, a, cfg.degree, "left", cfg.use_kernels)
+        if return_info:
+            alphas.append(a)
+            fros.append(_fro(R)[..., 0, 0])
+    sqrt_c = jnp.sqrt(c)
+    out = (X * sqrt_c).astype(in_dtype), (Y / sqrt_c).astype(in_dtype)
+    if return_info:
+        return out, IterInfo(jnp.stack(alphas), jnp.stack(fros))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Matrix sign
+# ---------------------------------------------------------------------------
+
+
+def signm(A: jax.Array, cfg: PrismConfig = PrismConfig(),
+          method: str = "prism", iters: Optional[int] = None,
+          key: Optional[jax.Array] = None, return_info: bool = False):
+    """sign(A) for A with A^2 symmetric and ||A||_2 <= 1 after ||.||_F scaling."""
+    iters = cfg.iterations if iters is None else iters
+    in_dtype = A.dtype
+    X = A.astype(cfg.dtype) / _fro(A).astype(cfg.dtype)
+    alphas, fros = [], []
+    for k in range(iters):
+        R = _eye_like(X) - _mm(X, X, cfg.use_kernels)
+        a = _resolve_alpha(k, R, cfg, method, key)
+        X = apply_g(X, R, a, cfg.degree, "right", cfg.use_kernels)
+        if return_info:
+            alphas.append(a)
+            fros.append(_fro(R)[..., 0, 0])
+    X = X.astype(in_dtype)
+    if return_info:
+        return X, IterInfo(jnp.stack(alphas), jnp.stack(fros))
+    return X

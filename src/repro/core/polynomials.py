@@ -1,0 +1,300 @@
+"""Polynomial algebra underlying the PRISM meta-algorithm.
+
+PRISM Part II replaces the degree-d Taylor update ``f_d`` with
+``g_d(xi; alpha) = f_{d-1}(xi) + alpha xi^d`` and picks ``alpha`` by
+minimizing the (sketched) Frobenius norm of the *next* residual.  For every
+algorithm in the paper's Table 1 that next residual is a polynomial in the
+current residual matrix R whose coefficients are polynomials in alpha:
+
+    h(x; alpha) = P_0(x) + alpha P_1(x) + ... + alpha^s P_s(x)
+
+and the objective
+
+    m(alpha) = || S h(R; alpha) ||_F^2 = tr( S h(R; alpha)^2 S^T )
+
+is a degree-2s polynomial in alpha whose coefficients are *fixed* linear
+combinations of the sketched power traces t_i = tr(S R^i S^T).  This module
+computes those fixed linear maps symbolically (in numpy, at trace time) and
+provides jittable constrained minimizers for m.
+
+The hand-derived c_1..c_4 formulas in the paper's Sec. 4.2 / App. A are
+reproduced exactly by this machinery (see tests/test_polynomials.py).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Scalar Taylor series of the PRISM target functions
+# ---------------------------------------------------------------------------
+
+
+def taylor_inv_sqrt(d: int) -> np.ndarray:
+    """Coefficients (ascending) of the degree-d Taylor poly of (1-x)^{-1/2}.
+
+    c_j = (2j-1)!! / (2j)!! = prod_{i<=j} (2i-1)/(2i);  c_0 = 1.
+    """
+    c = np.ones(d + 1, dtype=np.float64)
+    for j in range(1, d + 1):
+        c[j] = c[j - 1] * (2 * j - 1) / (2 * j)
+    return c
+
+
+def poly_mul(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    return np.convolve(a, b)
+
+
+def poly_add(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    n = max(len(a), len(b))
+    out = np.zeros(n, dtype=np.float64)
+    out[: len(a)] += a
+    out[: len(b)] += b
+    return out
+
+
+def poly_scale(a: np.ndarray, s: float) -> np.ndarray:
+    return np.asarray(a, dtype=np.float64) * s
+
+
+def monomial(k: int) -> np.ndarray:
+    m = np.zeros(k + 1, dtype=np.float64)
+    m[k] = 1.0
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Residual polynomials  h(x; alpha) = sum_j alpha^j P_j(x)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class AlphaPoly:
+    """h(x; alpha) = sum_j alpha^j polys[j](x); coefficient vectors ascending."""
+
+    polys: Tuple[Tuple[float, ...], ...]
+
+    @staticmethod
+    def make(polys: Sequence[np.ndarray]) -> "AlphaPoly":
+        return AlphaPoly(tuple(tuple(float(v) for v in p) for p in polys))
+
+    @property
+    def alpha_degree(self) -> int:
+        return len(self.polys) - 1
+
+    @property
+    def x_degree(self) -> int:
+        return max(len(p) for p in self.polys) - 1
+
+    def np_polys(self) -> Tuple[np.ndarray, ...]:
+        return tuple(np.asarray(p, dtype=np.float64) for p in self.polys)
+
+    def eval(self, x, alpha):
+        """Scalar/elementwise evaluation (used by oracles and tests)."""
+        x = jnp.asarray(x)
+        out = 0.0
+        for j, p in enumerate(self.np_polys()):
+            px = jnp.polyval(jnp.asarray(p[::-1].copy()), x)
+            out = out + (alpha ** j) * px
+        return out
+
+
+@functools.lru_cache(maxsize=None)
+def newton_schulz_residual(d: int) -> AlphaPoly:
+    """Residual poly of PRISM Newton-Schulz (sign / sqrt / polar).
+
+    h(x, alpha) = 1 - (1 - x) * g_d(x; alpha)^2 with
+    g_d(x; alpha) = f_{d-1}(x) + alpha x^d.
+    Expanding in alpha:
+      P_0 = 1 - (1-x) f_{d-1}^2
+      P_1 = -2 (1-x) x^d f_{d-1}
+      P_2 = -(1-x) x^{2d}
+    """
+    f = taylor_inv_sqrt(d - 1)
+    one_minus_x = np.array([1.0, -1.0])
+    p0 = poly_add(np.array([1.0]), poly_scale(poly_mul(one_minus_x, poly_mul(f, f)), -1.0))
+    p1 = poly_scale(poly_mul(one_minus_x, poly_mul(monomial(d), f)), -2.0)
+    p2 = poly_scale(poly_mul(one_minus_x, monomial(2 * d)), -1.0)
+    return AlphaPoly.make([p0, p1, p2])
+
+
+@functools.lru_cache(maxsize=None)
+def inverse_newton_residual(p: int) -> AlphaPoly:
+    """Residual poly of PRISM coupled inverse Newton for A^{-1/p} (App. A.3).
+
+    h(x; alpha) = x + sum_{i=1}^{p} binom(p, i) alpha^i (x^{i+1} - x^i).
+    """
+    from math import comb
+
+    polys = [monomial(1)]
+    for i in range(1, p + 1):
+        polys.append(poly_scale(poly_add(monomial(i + 1), poly_scale(monomial(i), -1.0)), comb(p, i)))
+    return AlphaPoly.make(polys)
+
+
+@functools.lru_cache(maxsize=None)
+def chebyshev_residual() -> AlphaPoly:
+    """Residual poly of PRISM Chebyshev inverse iteration (App. A.4).
+
+    h(x; alpha) = x^2 - alpha (x^2 - x^3).
+    """
+    p0 = monomial(2)
+    p1 = poly_add(monomial(3), poly_scale(monomial(2), -1.0))
+    return AlphaPoly.make([p0, p1])
+
+
+# ---------------------------------------------------------------------------
+# m(alpha) coefficients as a fixed linear map of power traces
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def trace_weight_matrix(apoly: AlphaPoly) -> np.ndarray:
+    """W such that  m_coeffs[k] = sum_i W[k, i] * t_i,  t_i = tr(S R^i S^T).
+
+    m(alpha) = tr(S h(R;alpha)^2 S^T)
+             = sum_{p,q} alpha^{p+q} tr(S P_p(R) P_q(R) S^T)
+    and P_p(R) P_q(R) expands over powers of R via coefficient convolution.
+    Shape: [2s+1, 2*x_degree+1].
+    """
+    polys = apoly.np_polys()
+    s = apoly.alpha_degree
+    max_pow = 2 * apoly.x_degree
+    W = np.zeros((2 * s + 1, max_pow + 1), dtype=np.float64)
+    for p in range(s + 1):
+        for q in range(s + 1):
+            conv = poly_mul(polys[p], polys[q])
+            W[p + q, : len(conv)] += conv
+    return W
+
+
+def max_trace_power(apoly: AlphaPoly) -> int:
+    return 2 * apoly.x_degree
+
+
+# ---------------------------------------------------------------------------
+# Jittable constrained polynomial minimization on [l, u]
+# ---------------------------------------------------------------------------
+
+
+def _polyval_asc(coeffs, x):
+    """Evaluate sum_k coeffs[..., k] x^k with broadcasting over leading dims."""
+    out = jnp.zeros_like(x)
+    for k in range(coeffs.shape[-1] - 1, -1, -1):
+        out = out * x + coeffs[..., k]
+    return out
+
+
+def _cbrt(x):
+    return jnp.sign(x) * jnp.abs(x) ** (1.0 / 3.0)
+
+
+def cubic_roots(a, b, c, d):
+    """Real roots of a x^3 + b x^2 + c x + d = 0, branchless.
+
+    Returns three candidates (may repeat / fall back to NaN-free copies of the
+    single real root when the other two are complex).  Degenerate leading
+    coefficients are handled by the caller via extra quadratic candidates.
+    """
+    eps = 1e-30
+    a = jnp.where(jnp.abs(a) < eps, eps, a)
+    # depressed cubic t^3 + p t + q,  x = t - b/(3a)
+    p = (3 * a * c - b * b) / (3 * a * a)
+    q = (2 * b ** 3 - 9 * a * b * c + 27 * a * a * d) / (27 * a ** 3)
+    shift = -b / (3 * a)
+    disc = (q / 2) ** 2 + (p / 3) ** 3
+    # --- one real root (disc > 0): Cardano
+    sq = jnp.sqrt(jnp.maximum(disc, 0.0))
+    r_single = _cbrt(-q / 2 + sq) + _cbrt(-q / 2 - sq) + shift
+    # --- three real roots (disc <= 0): trigonometric method
+    pm = jnp.minimum(p, -eps)  # p < 0 in this branch
+    m = 2 * jnp.sqrt(-pm / 3)
+    den = pm * m  # can underflow to -0.0 in fp32 (triple root at 0)
+    den = jnp.where(jnp.abs(den) < 1e-20, -1e-20, den)
+    arg = jnp.clip(3 * q / den, -1.0, 1.0)
+    theta = jnp.arccos(arg) / 3
+    two_pi_3 = 2 * jnp.pi / 3
+    r0 = m * jnp.cos(theta) + shift
+    r1 = m * jnp.cos(theta - two_pi_3) + shift
+    r2 = m * jnp.cos(theta - 2 * two_pi_3) + shift
+    single = disc > 0
+    return (
+        jnp.where(single, r_single, r0),
+        jnp.where(single, r_single, r1),
+        jnp.where(single, r_single, r2),
+    )
+
+
+def minimize_quartic(coeffs, lo: float, hi: float):
+    """argmin over [lo, hi] of quartic m(a) = sum_k coeffs[..., k] a^k.
+
+    Closed form: stationary points from the cubic m'(a) = 0 (Cardano +
+    trigonometric branch), plus quadratic/linear candidates for degenerate
+    leading coefficients, plus the interval endpoints.  Fully branchless and
+    batched over leading dims of ``coeffs``.
+    """
+    c1 = coeffs[..., 1]
+    c2 = coeffs[..., 2]
+    c3 = coeffs[..., 3] if coeffs.shape[-1] > 3 else jnp.zeros_like(c1)
+    c4 = coeffs[..., 4] if coeffs.shape[-1] > 4 else jnp.zeros_like(c1)
+    # m'(a) = c1 + 2 c2 a + 3 c3 a^2 + 4 c4 a^3
+    r0, r1, r2 = cubic_roots(4 * c4, 3 * c3, 2 * c2, c1)
+    # quadratic fallback (c4 ~ 0): 3 c3 a^2 + 2 c2 a + c1 = 0
+    qa, qb, qc = 3 * c3, 2 * c2, c1
+    qdisc = jnp.maximum(qb * qb - 4 * qa * qc, 0.0)
+    qden = jnp.where(jnp.abs(qa) < 1e-30, 1e-30, 2 * qa)
+    q0 = (-qb + jnp.sqrt(qdisc)) / qden
+    q1 = (-qb - jnp.sqrt(qdisc)) / qden
+    # linear fallback (c3 ~ c4 ~ 0)
+    lden = jnp.where(jnp.abs(qb) < 1e-30, 1e-30, qb)
+    lin = -qc / lden
+    lo_a = jnp.full_like(c1, lo)
+    hi_a = jnp.full_like(c1, hi)
+    cands = jnp.stack([lo_a, hi_a, r0, r1, r2, q0, q1, lin], axis=-1)
+    cands = jnp.clip(cands, lo, hi)
+    cands = jnp.where(jnp.isfinite(cands), cands, lo)
+    vals = _polyval_asc(coeffs[..., None, :], cands)
+    best = jnp.argmin(vals, axis=-1)
+    return jnp.take_along_axis(cands, best[..., None], axis=-1)[..., 0]
+
+
+def minimize_poly_grid(coeffs, lo: float, hi: float, num: int = 257,
+                       newton_iters: int = 2):
+    """Generic argmin of an arbitrary-degree poly on [lo, hi].
+
+    Dense grid scan + a few Newton refinements on m'.  Used for
+    inverse-Newton with p >= 3 (degree-2p objective) and as a property-test
+    oracle for the closed-form quartic path.
+    """
+    grid = jnp.linspace(lo, hi, num)
+    vals = _polyval_asc(coeffs[..., None, :], grid)
+    best = jnp.argmin(vals, axis=-1)
+    a = grid[best]
+    K = coeffs.shape[-1]
+    # derivative coefficients (ascending): dm[k] = (k+1) coeffs[k+1]
+    dm = coeffs[..., 1:] * jnp.arange(1, K, dtype=coeffs.dtype)
+    ddm = dm[..., 1:] * jnp.arange(1, K - 1, dtype=coeffs.dtype) if K > 2 else None
+    for _ in range(newton_iters):
+        if ddm is None:
+            break
+        g = _polyval_asc(jnp.broadcast_to(dm, a.shape + (dm.shape[-1],)), a)
+        h = _polyval_asc(jnp.broadcast_to(ddm, a.shape + (ddm.shape[-1],)), a)
+        step = jnp.where(h > 0, g / jnp.where(jnp.abs(h) < 1e-30, 1e-30, h), 0.0)
+        a = jnp.clip(a - step, lo, hi)
+    return a
+
+
+def minimize_alpha_poly(coeffs, lo: float, hi: float):
+    """Dispatch: closed form for degree <= 4, grid otherwise."""
+    if coeffs.shape[-1] <= 5:
+        pad = 5 - coeffs.shape[-1]
+        if pad:
+            coeffs = jnp.concatenate(
+                [coeffs, jnp.zeros(coeffs.shape[:-1] + (pad,), coeffs.dtype)], axis=-1)
+        return minimize_quartic(coeffs, lo, hi)
+    return minimize_poly_grid(coeffs, lo, hi)

@@ -1,0 +1,88 @@
+"""The PRISM alpha-fitting engine (meta-algorithm Part II).
+
+Given the residual matrix R_k of any Table-1 iteration, the engine
+
+  1. sketches power traces t_i = tr(S_k R_k^i S_k^T)     (core/sketch.py)
+  2. maps them through the algorithm's fixed trace-weight matrix W to get
+     the coefficients of the quartic (degree-2s) objective m(alpha)
+  3. minimizes m over the constraint interval [l, u] in closed form.
+
+Everything is jittable, batched over leading dims of R, and costs
+O(n^2 p) — the paper's headline overhead bound.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import PrismConfig
+from repro.core import polynomials as poly
+from repro.core import sketch as sk
+
+
+def fit_alpha(
+    R: jax.Array,
+    apoly: poly.AlphaPoly,
+    lo: float,
+    hi: float,
+    key: Optional[jax.Array] = None,
+    sketch_dim: int = 8,
+    use_kernels: bool = False,
+) -> jax.Array:
+    """alpha~_k = argmin_{alpha in [lo, hi]} || S h(R; alpha) ||_F^2.
+
+    Args:
+      R: residual matrix [..., n, n], symmetric.
+      apoly: the iteration's residual polynomial h(x; alpha).
+      lo, hi: the constraint interval [l, u].
+      key: PRNG key for the sketch; None => exact (unsketched) traces.
+      sketch_dim: p; 0 => exact traces regardless of key.
+
+    Returns alpha with shape R.shape[:-2].
+    """
+    max_pow = poly.max_trace_power(apoly)
+    if key is None or sketch_dim == 0:
+        t = sk.exact_power_traces(R, max_pow)
+    else:
+        S = sk.gaussian_sketch(key, sketch_dim, R.shape[-1], dtype=R.dtype)
+        t = sk.sketched_power_traces(R, S, max_pow, use_kernels=use_kernels)
+    W = jnp.asarray(poly.trace_weight_matrix(apoly), dtype=jnp.float32)
+    coeffs = jnp.einsum("ki,...i->...k", W, t)
+    return poly.minimize_alpha_poly(coeffs, lo, hi)
+
+
+def objective_value(R: jax.Array, apoly: poly.AlphaPoly, alpha) -> jax.Array:
+    """Exact m(alpha) = ||h(R; alpha)||_F^2 (test/diagnostic helper)."""
+    max_pow = poly.max_trace_power(apoly)
+    t = sk.exact_power_traces(R, max_pow)
+    W = jnp.asarray(poly.trace_weight_matrix(apoly), dtype=jnp.float32)
+    coeffs = jnp.einsum("ki,...i->...k", W, t)
+    return poly._polyval_asc(coeffs, jnp.asarray(alpha, jnp.float32))
+
+
+def alpha_schedule_key(key: jax.Array, k: jax.Array) -> jax.Array:
+    """Per-iteration sketch key (fresh S_k each iteration, as in Thm 2)."""
+    return jax.random.fold_in(key, k)
+
+
+def resolve_alpha(
+    k: jax.Array,
+    R: jax.Array,
+    apoly: poly.AlphaPoly,
+    cfg: PrismConfig,
+    key: Optional[jax.Array],
+) -> jax.Array:
+    """alpha_k per the config: warm iterations pin alpha = u (paper Sec. C),
+    later iterations fit via the sketched objective."""
+    lo, hi = cfg.bounds
+    if key is not None:
+        key = alpha_schedule_key(key, k)
+    fitted = fit_alpha(R, apoly, lo, hi, key=key, sketch_dim=cfg.sketch_dim,
+                       use_kernels=cfg.use_kernels)
+    if cfg.warm_alpha_iters <= 0:
+        return fitted
+    warm = jnp.full_like(fitted, hi)
+    return jnp.where(k < cfg.warm_alpha_iters, warm, fitted)

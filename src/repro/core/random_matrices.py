@@ -1,0 +1,82 @@
+"""Random-matrix generators used by the paper's experiments.
+
+* standard Gaussian matrices with varying aspect ratio (Fig. 3 / D.1),
+* matrices with a prescribed / log-uniform spectrum (Fig. 1 sigma sweep),
+* Wishart matrices (Fig. D.3),
+* HTMP — high-temperature Marchenko-Pastur (Hodgkinson et al. 2025) —
+  heavy-tailed spectra mimicking well-trained network gradients (Fig. 4).
+
+HTMP note (DESIGN.md §6): we reimplement HTMP from its mixing definition —
+Marchenko-Pastur bulk singular values with an inverse-gamma temperature
+multiplier of mean one; kappa -> inf recovers pure MP, small kappa gives a
+heavy upper tail.  This is an approximation of the reference sampler.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gaussian(key: jax.Array, n: int, m: int, dtype=jnp.float32) -> jax.Array:
+    """Standard Gaussian N(0, 1) entries (the paper's Fig. 3 inputs)."""
+    return jax.random.normal(key, (n, m), dtype=dtype)
+
+
+def haar_pair(key: jax.Array, n: int, m: int, dtype=jnp.float32):
+    """Haar-ish orthonormal U [n, r], V [m, r] with r = min(n, m) via QR."""
+    r = min(n, m)
+    ku, kv = jax.random.split(key)
+    U, _ = jnp.linalg.qr(jax.random.normal(ku, (n, r), dtype=dtype))
+    V, _ = jnp.linalg.qr(jax.random.normal(kv, (m, r), dtype=dtype))
+    return U, V
+
+
+def with_spectrum(key: jax.Array, n: int, m: int, sigmas: jax.Array,
+                  dtype=jnp.float32) -> jax.Array:
+    """A = U diag(sigmas) V^T with Haar factors; len(sigmas) = min(n, m)."""
+    U, V = haar_pair(key, n, m, dtype)
+    return (U * sigmas.astype(dtype)) @ V.T
+
+
+def log_uniform_spectrum(key: jax.Array, n: int, m: int, smin: float,
+                         smax: float = 1.0, dtype=jnp.float32) -> jax.Array:
+    """Singular values log-uniform in [smin, smax] (Fig. 1 sweep inputs)."""
+    kspec, kuv = jax.random.split(key)
+    r = min(n, m)
+    lo, hi = jnp.log(smin), jnp.log(smax)
+    s = jnp.exp(jax.random.uniform(kspec, (r,), minval=lo, maxval=hi))
+    s = s.at[0].set(smax).at[-1].set(smin)  # pin the extremes exactly
+    return with_spectrum(kuv, n, m, s, dtype)
+
+
+def wishart(key: jax.Array, n: int, m: int, dtype=jnp.float32) -> jax.Array:
+    """A = G^T G with G [n, m] Gaussian => Wishart [m, m] (Fig. D.3)."""
+    G = gaussian(key, n, m, dtype)
+    return G.T @ G
+
+
+def htmp(key: jax.Array, n: int, m: int, kappa: float,
+         dtype=jnp.float32) -> jax.Array:
+    """High-temperature Marchenko-Pastur matrix [n, m].
+
+    Singular values: MP bulk (from an actual Gaussian matrix) with squared
+    values multiplied by i.i.d. inverse-gamma(shape=kappa+1, scale=kappa)
+    weights (mean 1; heavy tail as kappa -> 0).
+    """
+    kg, kw, kuv = jax.random.split(key, 3)
+    G = gaussian(kg, n, m, dtype)
+    s = jnp.linalg.svd(G, compute_uv=False)  # MP bulk
+    # inverse-gamma(kappa+1, kappa): kappa / Gamma(kappa+1, 1)
+    g = jax.random.gamma(kw, kappa + 1.0, (s.shape[0],), dtype=jnp.float32)
+    w = kappa / jnp.maximum(g, 1e-12)
+    s_heavy = s * jnp.sqrt(w).astype(dtype)
+    s_heavy = jnp.sort(s_heavy)[::-1]
+    A = with_spectrum(kuv, n, m, s_heavy, dtype)
+    return A / jnp.max(s_heavy)  # normalize sigma_max to 1 like the paper
+
+
+def spd_with_eigs(key: jax.Array, n: int, eigs: jax.Array,
+                  dtype=jnp.float32) -> jax.Array:
+    """Symmetric PD matrix with prescribed eigenvalues."""
+    Q, _ = jnp.linalg.qr(jax.random.normal(key, (n, n), dtype=dtype))
+    return (Q * eigs.astype(dtype)) @ Q.T

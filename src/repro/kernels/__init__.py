@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the PRISM GEMM hot spots.
+
+  matmul_add    D = alpha A @ B + beta C   (fused Horner step)
+  gram          R = alpha I + beta X^T X   (symmetric syrk, half MXU work)
+  sketch_traces t_i = tr(S R^i S^T)        (fused chain + trace epilogue)
+
+ops.py — jit wrappers w/ batching + CPU fallback; ref.py — jnp oracles.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,76 @@
+"""Fused GEMM-with-epilogue Pallas TPU kernel:  D = alpha * A @ B + beta * C.
+
+This is the workhorse of the PRISM Newton-Schulz chains: every polynomial
+update X (f0 I + f1 R + ... + a R^d) is evaluated as d fused GEMMs
+(Horner on R), so the `+ beta * C` epilogue removes one full HBM
+read-modify-write of the [m, n] accumulator per Horner step compared to
+separate dot + add ops.
+
+Tiling: (bm x bk) @ (bk x bn) MXU tiles with an fp32 VMEM scratch
+accumulator; K is the innermost grid dimension, the C-epilogue and the
+output cast happen on the last K step.  Tile sizes are 128-aligned for the
+128x128 MXU systolic array.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, c_ref, d_ref, acc_ref, *, alpha, beta, n_k):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        out = alpha * acc_ref[...]
+        if beta != 0.0:
+            out = out + beta * c_ref[...].astype(jnp.float32)
+        d_ref[...] = out.astype(d_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "beta", "bm", "bn",
+                                             "bk", "interpret"))
+def matmul_add(A: jax.Array, B: jax.Array, C: jax.Array | None = None,
+               *, alpha: float = 1.0, beta: float = 0.0,
+               bm: int = 256, bn: int = 256, bk: int = 256,
+               interpret: bool = False) -> jax.Array:
+    """D = alpha * A @ B + beta * C for 2-D operands (batching in ops.py)."""
+    m, k = A.shape
+    k2, n = B.shape
+    assert k == k2, (A.shape, B.shape)
+    if C is None:
+        C = jnp.zeros((m, n), dtype=A.dtype)
+        beta = 0.0
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    # zero-pad to tile multiples (mathematically exact for GEMM+epilogue)
+    mp, np_, kp = (-m) % bm, (-n) % bn, (-k) % bk
+    Ap = jnp.pad(A, ((0, mp), (0, kp)))
+    Bp = jnp.pad(B, ((0, kp), (0, np_)))
+    Cp = jnp.pad(C, ((0, mp), (0, np_)))
+    M, N, K = Ap.shape[0], Bp.shape[1], Ap.shape[1]
+    n_k = K // bk
+    out = pl.pallas_call(
+        functools.partial(_kernel, alpha=alpha, beta=beta, n_k=n_k),
+        grid=(M // bm, N // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), A.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(Ap, Bp, Cp)
+    return out[:m, :n]

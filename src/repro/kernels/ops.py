@@ -1,0 +1,105 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Dispatch policy:
+  * on TPU backends the compiled Mosaic kernels run natively;
+  * on CPU (this container) ``interpret=True`` executes the kernel bodies
+    in Python for correctness validation, or — when ``REPRO_KERNEL_MODE=ref``
+    or the shapes are large — the pure-jnp oracle in ref.py is used so CPU
+    benchmarks aren't dominated by the interpreter.
+
+All wrappers accept leading batch dimensions and map the 2-D kernels over
+them (stacked scanned-layer parameter stacks use this path).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import gram as _gram
+from repro.kernels import matmul_add as _mma
+from repro.kernels import ref as _ref
+from repro.kernels import sketch_traces as _sk
+
+_LANE = 128  # TPU lane width: sketch dim padded up to this
+
+
+def _mode() -> str:
+    env = os.environ.get("REPRO_KERNEL_MODE", "auto")
+    if env != "auto":
+        return env  # "ref" | "interpret" | "native"
+    return "native" if jax.default_backend() == "tpu" else "ref"
+
+
+def _batched(fn, *arrays, n_batch_args=None):
+    """vmap fn over any shared leading batch dims of the first arrays."""
+    lead = arrays[0].shape[:-2]
+    if not lead:
+        return fn(*arrays)
+    size = 1
+    for d in lead:
+        size *= d
+    flat = [a.reshape((size,) + a.shape[len(lead):]) if a.ndim > 2 else a
+            for a in arrays]
+    mapped = jax.vmap(fn, in_axes=tuple(0 if a.ndim > 2 else None
+                                        for a in arrays))
+    out = mapped(*[f for f in flat])
+    return jax.tree.map(lambda o: o.reshape(lead + o.shape[1:]), out)
+
+
+def matmul_add(A, B, C=None, *, alpha: float = 1.0, beta: float = 0.0,
+               bm: int = 256, bn: int = 256, bk: int = 256):
+    """D = alpha * A @ B (+ beta * C), batched over leading dims."""
+    mode = _mode()
+    if mode == "ref":
+        return _ref.matmul_add(A, B, C, alpha=alpha, beta=beta)
+    interp = mode == "interpret"
+    fn = functools.partial(_mma.matmul_add, alpha=alpha, beta=beta,
+                           bm=bm, bn=bn, bk=bk, interpret=interp)
+    args = (A, B) if C is None else (A, B, C)
+    if C is None:
+        return _batched(lambda a, b: fn(a, b), A, B)
+    return _batched(lambda a, b, c: fn(a, b, C=c), A, B, C)
+
+
+def gram(X, *, alpha: float = 1.0, beta: float = -1.0,
+         bn: int = 256, bk: int = 256):
+    """R = alpha * I + beta * X^T X (symmetric syrk), batched."""
+    mode = _mode()
+    if mode == "ref":
+        return _ref.gram(X, alpha=alpha, beta=beta)
+    interp = mode == "interpret"
+    bn_eff = min(bn, X.shape[-1])
+
+    def one(x):
+        U = _gram.gram_upper(x, alpha=alpha, beta=beta, bn=bn, bk=bk,
+                             interpret=interp)
+        # mirror: diagonal blocks carry alpha*I + full tile; strictly-upper
+        # blocks transpose into the lower triangle.
+        return _gram.mirror_upper(U, bn_eff)
+
+    return _batched(one, X)
+
+
+def sketch_traces(R, S, max_power: int, *, bm: int = 256, bk: int = 256):
+    """t_i = tr(S R^i S^T), i = 0..max_power; fused chain kernel."""
+    mode = _mode()
+    if mode == "ref":
+        return _ref.sketch_traces(R, S, max_power)
+    interp = mode == "interpret"
+    p = S.shape[0]
+    pad = (-p) % _LANE
+
+    def one(r):
+        St = jnp.pad(S.T.astype(r.dtype), ((0, 0), (0, pad)))
+        V = St
+        t0 = jnp.sum(St.astype(jnp.float32) * St.astype(jnp.float32))
+        ts = [t0]
+        for _ in range(max_power):
+            V, t = _sk.sketch_step(r, V, St, bm=bm, bk=bk, interpret=interp)
+            ts.append(t)
+        return jnp.stack(ts).astype(jnp.float32)
+
+    return _batched(one, R)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts).
+
+Each function is the mathematical definition with no tiling — used by the
+per-kernel allclose sweeps in tests/test_kernels.py and as the CPU
+fallback path inside ops.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_add(A, B, C=None, *, alpha=1.0, beta=0.0):
+    """D = alpha * A @ B + beta * C."""
+    out = alpha * jnp.matmul(A, B, preferred_element_type=jnp.float32)
+    if C is not None and beta != 0.0:
+        out = out + beta * C.astype(jnp.float32)
+    return out.astype(A.dtype)
+
+
+def gram(X, *, alpha=1.0, beta=-1.0):
+    """R = alpha * I + beta * X^T X (symmetric)."""
+    n = X.shape[-1]
+    Xt = jnp.swapaxes(X, -1, -2)
+    G = jnp.matmul(Xt, X, preferred_element_type=jnp.float32)
+    out = alpha * jnp.eye(n, dtype=jnp.float32) + beta * G
+    return out.astype(X.dtype)
+
+
+def sketch_traces(R, S, max_power: int):
+    """t_i = tr(S R^i S^T), i = 0..max_power (fp32)."""
+    St = S.T.astype(R.dtype)
+    V = jnp.broadcast_to(St, R.shape[:-2] + St.shape)
+    traces = [jnp.sum(St * St, dtype=jnp.float32)
+              * jnp.ones(R.shape[:-2], jnp.float32)]
+    for _ in range(max_power):
+        V = jnp.matmul(R, V, preferred_element_type=jnp.float32).astype(R.dtype)
+        traces.append(jnp.sum(St * V, axis=(-2, -1), dtype=jnp.float32))
+    return jnp.stack(traces, axis=-1)

@@ -1,0 +1,284 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell the appropriate step function is lowered with production
+shardings and compiled; we record memory_analysis, cost_analysis (FLOPs /
+bytes), and the post-SPMD collective inventory for §Dry-run / §Roofline.
+
+  train_4k     -> train_step  (fwd + bwd + Muon/PRISM update)
+  prefill_32k  -> prefill_step (backbone + last-token logits)
+  decode_32k / long_500k -> serve_step (1 token vs seq_len state)
+
+long_500k only lowers for sub-quadratic archs (SSM / hybrid / SWA); pure
+full-attention archs are skipped by design (DESIGN.md §5).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi_pod] [--out results/dryrun]
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.analysis import hlo as hlo_lib  # noqa: E402
+from repro.analysis import roofline as rl  # noqa: E402
+from repro.config import (SHAPES, OptimizerConfig, PrismConfig,  # noqa: E402
+                          ShapeConfig)
+from repro.configs import arch_ids, get_config  # noqa: E402
+from repro.launch import sharding as sh  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import build  # noqa: E402
+from repro.models.inputs import decode_token_specs, train_batch_specs  # noqa: E402
+from repro.optim import make_optimizer  # noqa: E402
+from repro.serving.decode import make_prefill_step, make_serve_step  # noqa: E402
+from repro.sharding_ctx import activation_sharding  # noqa: E402
+from repro.train.state import (make_train_step, opt_state_shardings)  # noqa: E402
+
+OCFG = OptimizerConfig(
+    name="muon", learning_rate=2e-2,
+    matfn_method="prism",
+    prism=PrismConfig(degree=2, iterations=3, warm_alpha_iters=1,
+                      sketch_dim=8))
+
+# §Perf knobs (paper-faithful baseline = all defaults)
+STRATEGY = "tp"              # "tp" | "zero"
+GRADS_DTYPE = "float32"      # "float32" | "bfloat16"
+MUON_LOCAL_RESHARD = False
+
+
+def runnable(arch: str, shape_name: str) -> bool:
+    cfg = get_config(arch)
+    if shape_name == "long_500k":
+        return cfg.subquadratic
+    return True
+
+
+def count_params(shapes_tree) -> float:
+    return float(sum(np.prod(s.shape) for s in jax.tree.leaves(shapes_tree)))
+
+
+def active_params(cfg, n_params: float) -> float:
+    """Approximate active parameters for MoE archs (MODEL_FLOPS basis)."""
+    if cfg.moe is None:
+        return n_params
+    m = cfg.moe
+    # expert FFN params scale by k/E; everything else is dense
+    f_expert = 3 * cfg.d_model * cfg.d_ff * m.num_experts * cfg.num_layers
+    dense = n_params - f_expert
+    return dense + f_expert * m.num_experts_per_tok / m.num_experts
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               strategy: str = None, ocfg: OptimizerConfig = None,
+               loss_chunk: int = 0, moe_dispatch: str = None):
+    strategy = strategy or STRATEGY
+    ocfg = ocfg or OCFG
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(mesh.devices.shape))
+    cfg = get_config(arch)
+    if loss_chunk:
+        cfg = cfg.replace(loss_chunk=loss_chunk)
+    if moe_dispatch and cfg.moe is not None:
+        import dataclasses as _dc
+        cfg = cfg.replace(moe=_dc.replace(cfg.moe, dispatch=moe_dispatch))
+    shape = SHAPES[shape_name]
+    model = build(cfg)
+    # "zero" strategy is a train-cell optimization; serving keeps TP.
+    # It also requires global_batch >= chips (pure DP): on the multi-pod
+    # mesh with batch 256 < 512 chips the model axis would idle, so fall
+    # back to the TP baseline there (EXPERIMENTS.md §Perf scope note).
+    if shape.kind == "train":
+        cell_strategy = "tp" if strategy == "serve" else strategy
+    else:
+        # serving cells: "serve" (TP + data-replicated params) is the
+        # decode optimization; anything else keeps the TP baseline
+        cell_strategy = "serve" if strategy == "serve" else "tp"
+    if cell_strategy == "zero" and shape.global_batch < chips:
+        cell_strategy = "tp"
+    rules = sh.param_rules(cfg, mesh, cell_strategy)
+    axes = model.logical_axes()
+    pshapes = model.param_shapes()
+    pshard = sh.tree_shardings(mesh, axes, rules, pshapes)
+    n_params = count_params(pshapes)
+
+    act_rules = sh.activation_rules(cfg, mesh, cell_strategy)
+    with mesh, activation_sharding(mesh, act_rules):
+        if shape.kind == "train":
+            master = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                pshapes)
+            opt = make_optimizer(ocfg, axes)
+            sshapes = jax.eval_shape(opt.init, master)
+            sshard = opt_state_shardings(mesh, opt, master, pshard)
+            bspecs = train_batch_specs(cfg, shape)
+            bshard = sh.train_batch_shardings(mesh, cfg)
+            step_spec = jax.ShapeDtypeStruct((), jnp.int32)
+            train_step = make_train_step(model, opt, ocfg)
+            lowered = jax.jit(
+                train_step,
+                in_shardings=(pshard, sshard, bshard, None),
+                out_shardings=(pshard, sshard, None),
+                donate_argnums=(0, 1),
+            ).lower(master, sshapes, bspecs, step_spec)
+            tokens_per_step = shape.global_batch * shape.seq_len
+            mf = rl.model_flops(n_params, tokens_per_step, "train",
+                                active_params(cfg, n_params))
+        elif shape.kind == "prefill":
+            bspecs = train_batch_specs(cfg, shape)
+            bshard = sh.train_batch_shardings(mesh, cfg)
+            prefill_step = make_prefill_step(model)
+            lowered = jax.jit(
+                prefill_step, in_shardings=(pshard, bshard),
+            ).lower(pshapes, bspecs)
+            tokens_per_step = shape.global_batch * shape.seq_len
+            mf = rl.model_flops(n_params, tokens_per_step, "prefill",
+                                active_params(cfg, n_params))
+        else:  # decode
+            B = shape.global_batch
+            cache_shapes = jax.eval_shape(
+                lambda: model.init_cache(B, shape.seq_len))
+            cshard = sh.cache_shardings(mesh, cfg, cache_shapes, B)
+            tspecs = decode_token_specs(cfg, B)
+            tshard = sh.decode_input_shardings(mesh, cfg, B)
+            serve_step = make_serve_step(model)
+            lowered = jax.jit(
+                serve_step,
+                in_shardings=(pshard, cshard, tshard["tokens"],
+                              tshard["pos"]),
+                donate_argnums=(1,),
+            ).lower(pshapes, cache_shapes, tspecs["tokens"], tspecs["pos"])
+            tokens_per_step = B
+            mf = rl.model_flops(n_params, tokens_per_step, "decode",
+                                active_params(cfg, n_params))
+    return lowered, mesh, chips, n_params, mf
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             keep_hlo: bool = False, strategy: str = None,
+             ocfg: OptimizerConfig = None, loss_chunk: int = 0,
+             moe_dispatch: str = None):
+    t0 = time.time()
+    lowered, mesh, chips, n_params, model_fl = lower_cell(
+        arch, shape_name, multi_pod, strategy=strategy, ocfg=ocfg,
+        loss_chunk=loss_chunk, moe_dispatch=moe_dispatch)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    hlo_text = compiled.as_text()
+    # loop-aware analysis: xla's cost_analysis counts while bodies once
+    # (under-reporting scanned-layer graphs by ~num_layers); analyze_module
+    # re-derives flops/bytes/collectives with trip-count multiplicity.
+    mod = hlo_lib.analyze_module(hlo_text)
+    coll = {"wire_bytes_per_chip": mod["wire_bytes_per_chip"],
+            "bytes_by_kind": mod["bytes_by_kind"],
+            "count_by_kind": mod["count_by_kind"]}
+    roof = rl.Roofline(
+        flops_per_chip=mod["flops"],
+        hbm_bytes_per_chip=mod["hbm_bytes"],
+        wire_bytes_per_chip=mod["wire_bytes_per_chip"],
+        model_flops_global=model_fl,
+        chips=chips,
+    )
+    flops = mod["flops"]
+    bytes_accessed = mod["hbm_bytes"]
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "n_params": n_params,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "cost": {"flops": flops, "bytes_accessed": bytes_accessed,
+                 "bytes_accessed_upper": mod.get("hbm_bytes_upper"),
+                 "xla_cost_analysis_flops": float(ca.get("flops", 0.0)),
+                 "transcendentals": float(ca.get("transcendentals", 0.0))},
+        "memory": {
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+            "output_bytes": getattr(ma, "output_size_in_bytes", None),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(ma, "alias_size_in_bytes", None),
+        },
+        "collectives": coll,
+        "roofline": roof.as_dict(),
+    }
+    if keep_hlo:
+        rec["hlo_len"] = len(hlo_text)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi_pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both_meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--strategy", default=None, choices=["tp", "zero", "serve"])
+    ap.add_argument("--grads_dtype", default=None,
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--muon_local_reshard", action="store_true")
+    ap.add_argument("--loss_chunk", type=int, default=0)
+    ap.add_argument("--moe_dispatch", default=None,
+                    choices=["global", "per_sample"])
+    args = ap.parse_args()
+
+    cells = []
+    archs = arch_ids() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for arch in archs:
+        for shp in shapes:
+            if not runnable(arch, shp):
+                continue
+            for mp in meshes:
+                cells.append((arch, shp, mp))
+
+    os.makedirs(args.out, exist_ok=True)
+    n_ok = 0
+    for arch, shp, mp in cells:
+        tag = f"{arch}__{shp}__{'mp' if mp else 'sp'}"
+        try:
+            import dataclasses
+            ocfg = OCFG
+            if args.grads_dtype or args.muon_local_reshard:
+                ocfg = dataclasses.replace(
+                    OCFG,
+                    grads_dtype=args.grads_dtype or OCFG.grads_dtype,
+                    muon_local_reshard=args.muon_local_reshard)
+            rec = run_cell(arch, shp, mp, strategy=args.strategy,
+                           ocfg=ocfg, loss_chunk=args.loss_chunk,
+                           moe_dispatch=args.moe_dispatch)
+            n_ok += 1
+            status = "OK"
+        except Exception as e:  # noqa: BLE001 — record and continue
+            rec = {"arch": arch, "shape": shp,
+                   "mesh": "2x16x16" if mp else "16x16",
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+            status = "FAIL"
+        with open(os.path.join(args.out, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+        r = rec.get("roofline", {})
+        print(f"[{status}] {tag} compile={rec.get('compile_s', '-')}s "
+              f"dominant={r.get('dominant', '-')} "
+              f"roofline={r.get('roofline_fraction', 0):.3f}",
+              flush=True)
+    print(f"done: {n_ok}/{len(cells)} cells OK")
+    if n_ok < len(cells):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Production mesh construction (single-pod 16x16, multi-pod 2x16x16).
+
+``make_production_mesh`` is a FUNCTION (never module-level state) so that
+importing this module does not touch jax device state — required because
+the dry-run process must set XLA_FLAGS before any jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """TPU v5e production mesh: (data=16, model=16) per pod; the multi-pod
+    variant adds a leading pure-DP "pod" axis (2 pods = 512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(data: int = 2, model: int = 2, *,
+                    multi_pod: bool = False, pods: int = 2):
+    """Small mesh for CPU multi-device tests (device count forced by the
+    caller via XLA_FLAGS before jax init)."""
+    shape = (pods, data, model) if multi_pod else (data, model)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

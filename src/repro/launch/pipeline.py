@@ -1,0 +1,102 @@
+"""GPipe-style pipeline parallelism over a mesh axis (opt-in).
+
+``pipeline_apply`` runs a stack of identical stages (each owning an equal
+slice of the layer stack) over a mesh axis — on the production mesh the
+"pod" axis, so each pod holds half the layers and activations stream
+between pods via collective_permute, replacing cross-pod parameter
+replication with a fill-drain microbatch schedule.
+
+Schedule: classic GPipe forward, T = n_micro + n_stages - 1 ticks; stage s
+processes microbatch (t - s) at tick t.  The wrapper runs inside
+``jax.shard_map`` over the pipeline axis; everything else (data/tensor
+sharding inside a stage) composes via the remaining mesh axes left in
+"auto" mode.
+
+This is the forward path (inference / activation-streaming); training
+integration (1F1B with backward interleave) is left as the documented
+extension point.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def gpipe_forward(stage_fn: Callable, axis: str, n_stages: int,
+                  n_micro: int):
+    """Build the per-device pipelined forward.
+
+    stage_fn(stage_params, x) -> y : one stage's computation; x/y share
+    shape [micro_batch, ...].
+
+    Returns fn(stage_params_local, x_micro [n_micro, mb, ...]) -> y
+    (valid on the LAST stage; other stages return zeros) to be used
+    inside shard_map with the stage dim of params mapped over ``axis``.
+    """
+
+    def run(params_local, x_micro):
+        # shard_map keeps the sharded stage dim with local size 1: drop it
+        params_local = jax.tree.map(lambda p: p[0], params_local)
+        stage = jax.lax.axis_index(axis)
+        T = n_micro + n_stages - 1
+        mb_shape = x_micro.shape[1:]
+
+        def tick(carry, t):
+            buf, outs = carry
+            mb = t - stage
+            active = jnp.logical_and(mb >= 0, mb < n_micro)
+            # stage 0 reads its own microbatch; later stages read the
+            # activation handed over by the previous stage
+            x0 = jax.lax.dynamic_index_in_dim(
+                x_micro, jnp.clip(t, 0, n_micro - 1), 0, keepdims=False)
+            x_in = jnp.where(stage == 0, x0, buf)
+            y = stage_fn(params_local, x_in)
+            y = jnp.where(active, y, jnp.zeros_like(y))
+            # hand over to the next stage
+            buf_next = jax.lax.ppermute(
+                y, axis, [(i, i + 1) for i in range(n_stages - 1)])
+            # last stage records its finished microbatch
+            is_last = stage == n_stages - 1
+            outs = jax.lax.cond(
+                jnp.logical_and(active, is_last),
+                lambda o: jax.lax.dynamic_update_index_in_dim(
+                    o, y, jnp.clip(mb, 0, n_micro - 1), 0),
+                lambda o: o, outs)
+            return (buf_next, outs), None
+
+        buf0 = jnp.zeros(mb_shape, x_micro.dtype)
+        outs0 = jnp.zeros((n_micro,) + mb_shape, x_micro.dtype)
+        (_, outs), _ = jax.lax.scan(tick, (buf0, outs0), jnp.arange(T))
+        return outs
+
+    return run
+
+
+def pipeline_apply(mesh, stage_fn: Callable, stage_params, x,
+                   n_micro: int, axis: str = "pod"):
+    """Run x [B, ...] through n_stages pipelined stages over ``axis``.
+
+    stage_params: pytree with a leading stage dimension == mesh.shape[axis]
+    on every leaf.  Returns y [B, ...] (gathered from the last stage).
+    """
+    n_stages = mesh.shape[axis]
+    B = x.shape[0]
+    assert B % n_micro == 0, (B, n_micro)
+    mb = B // n_micro
+    x_micro = x.reshape((n_micro, mb) + x.shape[1:])
+    run = gpipe_forward(stage_fn, axis, n_stages, n_micro)
+    mapped = jax.shard_map(
+        run, mesh=mesh,
+        in_specs=(P(axis), P()),
+        out_specs=P(axis),  # per-stage outputs stacked; last stage valid
+        check_vma=False,
+        axis_names=frozenset({axis}))  # other mesh axes stay "auto"
+    outs = mapped(stage_params, x_micro)
+    # outs [n_stages * n_micro, mb, ...]: only the last stage's block is
+    # the real output (earlier stages contributed zeros)
+    outs = outs.reshape((n_stages, n_micro, mb) + x.shape[1:])
+    return outs[-1].reshape((B,) + x.shape[1:])

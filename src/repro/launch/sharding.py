@@ -1,0 +1,240 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style).
+
+Every parameter/state/input dimension carries a logical name (see the
+models' ``logical_axes``); this module maps those names to mesh axes:
+
+  embed      -> data            (FSDP / ZeRO-3: params gathered on use)
+  vocab/mlp/heads/expert_mlp -> model   (tensor parallelism)
+  experts    -> model for EP archs (num_experts % model == 0), else None
+  batch      -> (pod, data)     (data parallelism; pod axis is pure DP)
+  kv_seq     -> model           (decode KV caches; (data, model) when the
+                                 cell's batch=1, e.g. long_500k)
+  layers / head_dim / codebooks -> never sharded
+
+Dimensions that do not divide the mesh axis are padded by GSPMD (legal,
+slightly wasteful — flagged in EXPERIMENTS.md where it matters).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import MeshConfig, ModelConfig, ShapeConfig
+
+
+def param_rules(cfg: ModelConfig, mesh: Mesh,
+                strategy: str = "tp") -> Dict[str, Any]:
+    """Parameter sharding rules.
+
+    strategy="tp"   (baseline): FSDP over data x tensor-parallel over model
+                    — activations all-reduce every layer (1D Megatron TP).
+    strategy="zero" (beyond-paper, single-pod train cells): pure ZeRO-3 —
+                    params flat-sharded over (data, model), batch over the
+                    whole mesh, NO TP activation all-reduces; weights move
+                    (all-gather on use) instead of activations.  Wins when
+                    tokens_per_chip * d_model >> params_per_layer, which
+                    holds for every train_4k cell (see EXPERIMENTS.md §Perf).
+    """
+    expert_ep = (cfg.moe is not None and cfg.moe.sharding == "expert")
+    if strategy == "serve":
+        # decode is latency-bound: FSDP weight gathers per token dominate
+        # the step (measured: 1.3s/token of the 1.755s collective term on
+        # command-r decode_32k).  Replicate params across data, shard over
+        # model only — zero weight movement per step; params bf16 / 16-way
+        # TP fit HBM for every assigned arch (command-r: 4.4 GB/chip).
+        base = param_rules(cfg, mesh, "tp")
+        base["embed"] = None
+        return base
+    if strategy == "zero":
+        flat = tuple(mesh.axis_names)  # ("data","model") / ("pod",...)
+        return {
+            "embed": flat,
+            "vocab": None,
+            "mlp": None,
+            # expert weights keep 2D EP/TP sharding: under pure ZeRO their
+            # contraction dim is sharded and every expert einsum psums an
+            # activation-sized tensor (measured: +21s on mixtral train).
+            # Axis dedup in constrain_spec turns embed (data, model) into
+            # (data,) for these tensors.
+            "expert_mlp": None if expert_ep else "model",
+            "experts": "model" if expert_ep else None,
+            "heads": None,
+            "kv_heads": None,
+            "head_dim": None,
+            "layers": None,
+            "codebooks": None,
+            None: None,
+        }
+    model_ax = "model"
+    return {
+        "embed": "data",
+        "vocab": model_ax,
+        "mlp": model_ax,
+        "expert_mlp": None if expert_ep else model_ax,
+        "experts": model_ax if expert_ep else None,
+        "heads": model_ax,
+        "kv_heads": None,   # kv heads < model axis on every GQA arch
+        "head_dim": None,
+        "layers": None,
+        "codebooks": None,
+        None: None,
+    }
+
+
+def spec_from_axes(axes: Tuple, rules: Dict[str, Any]) -> P:
+    return P(*[rules.get(a, None) for a in axes])
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for e in entry:
+            n *= mesh.shape[e]
+        return n
+    return mesh.shape[entry]
+
+
+def constrain_spec(mesh: Mesh, spec: P, shape: Tuple[int, ...]) -> P:
+    """Make a spec legal for jit in_shardings:
+    * drop mesh axes from dims they do not divide (granite's vocab
+      49155 % 16 != 0 — production frameworks pad instead, DESIGN.md §4);
+    * dedup mesh axes used by more than one dim (keep the later, more
+      specific rule: e.g. expert tensors under the zero strategy keep
+      expert_mlp->model and reduce embed (data, model) to (data,))."""
+    entries = list(tuple(spec)) + [None] * (len(shape) - len(spec))
+    # dedup from the right: later (more specific) dims keep their axes
+    used: set = set()
+    for i in range(len(entries) - 1, -1, -1):
+        e = entries[i]
+        if e is None:
+            continue
+        axes = list(e) if isinstance(e, (tuple, list)) else [e]
+        kept = [a for a in axes if a not in used]
+        used.update(kept)
+        entries[i] = tuple(kept) if len(kept) > 1 else \
+            (kept[0] if kept else None)
+    out = []
+    for dim, entry in zip(shape, entries):
+        if entry is not None and dim % _axis_size(mesh, entry) != 0:
+            entry = None
+        out.append(entry)
+    return P(*out)
+
+
+def tree_shardings(mesh: Mesh, axes_tree, rules, shapes_tree=None) -> Any:
+    def one(axes, shape=None):
+        spec = spec_from_axes(axes, rules)
+        if shape is not None:
+            spec = constrain_spec(mesh, spec, tuple(shape.shape))
+        return NamedSharding(mesh, spec)
+
+    is_axes = lambda t: isinstance(t, tuple) and \
+        all(isinstance(x, (str, type(None))) for x in t)
+    if shapes_tree is None:
+        return jax.tree.map(one, axes_tree, is_leaf=is_axes)
+    return jax.tree.map(one, axes_tree, shapes_tree, is_leaf=is_axes)
+
+
+def batch_axes(mesh: Mesh) -> Tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def activation_rules(cfg: ModelConfig, mesh: Mesh,
+                     strategy: str = "tp") -> Dict[str, Any]:
+    """Logical-axis rules for with_sharding_constraint annotations
+    (installed via repro.sharding_ctx.activation_sharding)."""
+    expert_ep = (cfg.moe is not None and cfg.moe.sharding == "expert")
+    if strategy == "serve":
+        return activation_rules(cfg, mesh, "tp")
+    if strategy == "zero":
+        flat = tuple(mesh.axis_names)
+        return {
+            "batch": flat, "seq": None, "embed": None, "embed_act": None,
+            "heads": None, "kv_heads": None, "head_dim": None, "mlp": None,
+            "expert_mlp": None if expert_ep else "model",
+            "experts": "model" if expert_ep else None, "vocab": None,
+            "kv_seq": "model",
+            # Muon local-reshard targets (iteration 3 of §Perf)
+            "opt_layers": "model", "opt_rows": "data",
+        }
+    return {
+        "batch": batch_axes(mesh),
+        "seq": None,
+        "embed": None,          # activations 1D-TP: embed stays local
+        "embed_act": None,
+        "heads": "model",
+        "kv_heads": None,
+        "head_dim": None,
+        "mlp": "model",
+        "expert_mlp": None if expert_ep else "model",
+        "experts": "model" if expert_ep else None,
+        "vocab": "model",
+        "kv_seq": "model",
+        "opt_layers": "model", "opt_rows": "data",
+    }
+
+
+def train_batch_shardings(mesh: Mesh, cfg: ModelConfig):
+    b = batch_axes(mesh)
+    out = {"tokens": NamedSharding(mesh, P(b, None, None))
+           if cfg.family == "audio" else NamedSharding(mesh, P(b, None))}
+    if cfg.family == "vlm":
+        out["patches"] = NamedSharding(mesh, P(b, None, None))
+    return out
+
+
+def cache_shardings(mesh: Mesh, cfg: ModelConfig, cache, batch_size: int):
+    """Shardings for the decode cache pytree, by leaf ndim/role."""
+    b = batch_axes(mesh)
+    kv_seq = ("data", "model") if batch_size == 1 else "model"
+    bax = None if batch_size == 1 else b
+
+    def one(path, leaf):
+        names = [str(getattr(p, "key", "")) for p in path]
+        if "kpos" in names:
+            spec = P(bax, kv_seq)
+        elif "k" in names or "v" in names:
+            # [* lead, batch, kv_seq, kv_heads, head_dim]
+            lead = leaf.ndim - 4
+            spec = P(*([None] * lead), bax, kv_seq, None, None)
+        elif "ssm" in names and leaf.ndim == 4:  # [L, B, d_inner, state]
+            spec = P(None, bax, "model", None)
+        elif "conv" in names:  # [L?, B, dc-1, d_inner]
+            lead = leaf.ndim - 3
+            spec = P(*([None] * lead), bax, None, "model")
+        elif "h" in names:  # rglru state [P?, B, width]
+            lead = leaf.ndim - 2
+            spec = P(*([None] * lead), bax, "model")
+        else:
+            spec = P(*([None] * leaf.ndim))
+        return NamedSharding(mesh, constrain_spec(mesh, spec,
+                                                  tuple(leaf.shape)))
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def decode_input_shardings(mesh: Mesh, cfg: ModelConfig, batch_size: int):
+    b = None if batch_size == 1 else batch_axes(mesh)
+    tok = NamedSharding(mesh, P(b, None, None)) if cfg.family == "audio" \
+        else NamedSharding(mesh, P(b, None))
+    return {"tokens": tok, "pos": NamedSharding(mesh, P(b, None))}
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def shardings_like(mesh: Mesh, shapes_tree, ref_shardings_tree):
+    """Broadcast a reference sharding tree (params) onto a same-structure
+    state tree; scalars/rank-0 leaves are replicated."""
+
+    def one(shape, sh):
+        if not shape.shape:
+            return replicated(mesh)
+        return sh
+
+    return jax.tree.map(one, shapes_tree, ref_shardings_tree)

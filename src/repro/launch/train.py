@@ -1,0 +1,88 @@
+"""Training launcher CLI.
+
+  python -m repro.launch.train --arch gpt2-paper --steps 100 \
+      --optimizer muon --method prism --seq 512 --batch 8
+
+On a real TPU fleet the same entry point builds the production mesh
+(--mesh production [--multi_pod]) and shards params/optimizer/batch with
+the rules in launch/sharding.py; on this CPU container the default
+--mesh none runs single-device (smoke/bench scale).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.config import OptimizerConfig, PrismConfig, TrainConfig
+from repro.configs import get_config, get_smoke_config
+from repro.data import DataConfig
+from repro.launch import sharding as sh
+from repro.launch.mesh import make_production_mesh
+from repro.models import build
+from repro.sharding_ctx import activation_sharding
+from repro.train import Trainer
+from repro.train.state import opt_state_shardings
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gpt2-paper")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--optimizer", default="muon",
+                    choices=["muon", "shampoo", "adamw"])
+    ap.add_argument("--method", default="prism",
+                    choices=["prism", "polar_express", "newton_schulz",
+                             "eigh"])
+    ap.add_argument("--lr", type=float, default=6e-3)
+    ap.add_argument("--mesh", default="none",
+                    choices=["none", "production"])
+    ap.add_argument("--multi_pod", action="store_true")
+    ap.add_argument("--ckpt_dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt_every", type=int, default=50)
+    ap.add_argument("--compression", default="none",
+                    choices=["none", "int8"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
+    model = build(cfg)
+    ocfg = OptimizerConfig(
+        name=args.optimizer, learning_rate=args.lr,
+        matfn_method=args.method, gradient_compression=args.compression,
+        prism=PrismConfig(degree=2, iterations=3, warm_alpha_iters=3,
+                          sketch_dim=8))
+    tcfg = TrainConfig(steps=args.steps, checkpoint_dir=args.ckpt_dir,
+                       checkpoint_every=args.ckpt_every, log_every=10)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                      global_batch=args.batch)
+
+    if args.mesh == "production":
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        rules = sh.param_rules(cfg, mesh)
+        pshapes = model.param_shapes()
+        import jax.numpy as jnp
+        master = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), pshapes)
+        pshard = sh.tree_shardings(mesh, model.logical_axes(), rules,
+                                   pshapes)
+        from repro.optim import make_optimizer
+        opt = make_optimizer(ocfg, model.logical_axes())
+        sshard = opt_state_shardings(mesh, opt, master, pshard)
+        shardings = {"params": pshard, "opt": sshard,
+                     "batch": sh.train_batch_shardings(mesh, cfg)}
+        with mesh, activation_sharding(mesh,
+                                       sh.activation_rules(cfg, mesh)):
+            trainer = Trainer(model, ocfg, tcfg, dcfg, mesh, shardings)
+            trainer.run(seed=args.seed)
+    else:
+        trainer = Trainer(model, ocfg, tcfg, dcfg)
+        trainer.run(seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

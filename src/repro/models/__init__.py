@@ -1,0 +1,4 @@
+"""Model zoo: composable decoder framework for all assigned families."""
+from repro.models.transformer import Model, build
+
+__all__ = ["Model", "build"]

@@ -1,0 +1,215 @@
+"""Grouped-query attention with flash-style chunked softmax.
+
+Supports: GQA (num_kv_heads < num_heads), qk-norm (Qwen3), QKV bias
+(Qwen2.5), RoPE, sliding-window (Mixtral) / local (RecurrentGemma)
+attention, and single-token decode against a KV cache.
+
+The train/prefill path never materializes the [S, S] score matrix: it
+scans over KV blocks with an online-softmax running (max, denom, acc)
+carry, so activation memory is O(S * block) — required for prefill_32k.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+from repro.sharding_ctx import shard_activation
+
+KV_BLOCK = 1024
+HEAD_PAD = 16  # pad head counts to the model-axis width for clean TP
+
+
+def padded_heads(cfg: ModelConfig):
+    """(H_padded, KV_padded).  Heads pad up to a multiple of HEAD_PAD with
+    exactly-zero parameters: zero heads produce zero outputs AND zero
+    gradients, and Newton-Schulz polar (Muon) preserves zero columns, so
+    padding is mathematically inert while making 40/24/10/56-head archs
+    16-way tensor-shardable (Megatron pads the same way)."""
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    Hp = -(-H // HEAD_PAD) * HEAD_PAD
+    kvp = Hp if KV == H else KV  # MHA pads kv with q; GQA keeps kv
+    assert Hp % kvp == 0, (Hp, kvp)
+    return Hp, kvp
+
+
+def init_attention(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    nh_t, nkv_t = cfg.num_heads, cfg.num_kv_heads
+    nh, nkv = padded_heads(cfg)
+    ks = jax.random.split(key, 4)
+
+    def zero_pad(w, axis, true_n):
+        if w.shape[axis] == true_n:
+            return w
+        idx = [slice(None)] * w.ndim
+        idx[axis] = slice(true_n, None)
+        return w.at[tuple(idx)].set(0)
+
+    p = {
+        "wq": zero_pad(L.dense_init(ks[0], (d, nh, hd), -3, dtype), 1, nh_t),
+        "wk": zero_pad(L.dense_init(ks[1], (d, nkv, hd), -3, dtype), 1,
+                       nkv_t),
+        "wv": zero_pad(L.dense_init(ks[2], (d, nkv, hd), -3, dtype), 1,
+                       nkv_t),
+        "wo": zero_pad(L.dense_init(ks[3], (nh, hd, d), -3, dtype), 0, nh_t),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nh, hd), dtype)
+        p["bk"] = jnp.zeros((nkv, hd), dtype)
+        p["bv"] = jnp.zeros((nkv, hd), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = L.init_rms_norm(hd)
+        p["k_norm"] = L.init_rms_norm(hd)
+    return p
+
+
+def attention_axes(cfg: ModelConfig):
+    p = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if cfg.qkv_bias:
+        p.update(bq=("heads", "head_dim"), bk=("kv_heads", "head_dim"),
+                 bv=("kv_heads", "head_dim"))
+    if cfg.qk_norm:
+        p.update(q_norm=("head_dim",), k_norm=("head_dim",))
+    return p
+
+
+def _project_qkv(params, x, positions, cfg: ModelConfig):
+    """x [B, S, D] -> q [B, S, H, Hd], k/v [B, S, KV, Hd] (RoPE applied)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    if cfg.qk_norm:
+        q = L.rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = L.rms_norm(k, params["k_norm"], cfg.norm_eps)
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    q = shard_activation(q, ("batch", "seq", "heads", "head_dim"))
+    k = shard_activation(k, ("batch", "seq", "kv_heads", "head_dim"))
+    v = shard_activation(v, ("batch", "seq", "kv_heads", "head_dim"))
+    return q, k, v
+
+
+def _expand_kv(k, groups: int):
+    """[B, S, KV, Hd] -> [B, S, H, Hd] by repeating each kv head.
+
+    Sharding note: reshaping a model-sharded H dim into (KV, groups)
+    de-shards attention under GSPMD (verified on the dry-run — attention
+    compute replicated across the model axis).  Repeating KV up to H keeps
+    the head dim intact and model-sharded; per chip the repeat gathers
+    only the kv heads its q-heads need.
+    """
+    if groups == 1:
+        return k
+    return jnp.repeat(k, groups, axis=2)
+
+
+def _flash_attend(q, k, v, q_pos, k_pos, window: int, kv_block: int):
+    """Online-softmax attention; q [B,S,H,Hd], k/v [B,Sk,KV,Hd]."""
+    B, S, H, Hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    k = shard_activation(_expand_kv(k, H // KV),
+                         ("batch", "seq", "heads", "head_dim"))
+    v = shard_activation(_expand_kv(v, H // KV),
+                         ("batch", "seq", "heads", "head_dim"))
+    scale = 1.0 / jnp.sqrt(Hd).astype(jnp.float32)
+    qf = q.astype(jnp.float32) * scale
+    nb = -(-Sk // kv_block)
+    pad = nb * kv_block - Sk
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kpos = jnp.pad(k_pos, ((0, 0), (0, pad)),
+                   constant_values=jnp.iinfo(jnp.int32).max)
+    kb = kp.reshape(B, nb, kv_block, H, Hd).transpose(1, 0, 2, 3, 4)
+    vb = vp.reshape(B, nb, kv_block, H, Hd).transpose(1, 0, 2, 3, 4)
+    pb = kpos.reshape(B, nb, kv_block).transpose(1, 0, 2)
+
+    def body(carry, blk):
+        m, den, acc = carry
+        kc, vc, pc = blk  # [B, kb, H, Hd], [B, kb]
+        # bf16 operands, fp32 MXU accumulation (halves attention HBM reads)
+        s = jnp.einsum("bshk,bthk->bsht", qf.astype(q.dtype), kc,
+                       preferred_element_type=jnp.float32)
+        bias = L.causal_mask_bias(q_pos, pc, window)  # [B, S, kb]
+        s = s + bias[:, :, None, :]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        den = den * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bsht,bthk->bshk", p.astype(q.dtype), vc,
+            preferred_element_type=jnp.float32)
+        return (m_new, den, acc), None
+
+    # constrain scan carries: without this GSPMD has no preference for the
+    # zero-init carries and unifies the loop on a replicated-head layout
+    m0 = shard_activation(jnp.full((B, S, H), L.NEG_INF, jnp.float32),
+                          ("batch", "seq", "heads"))
+    d0 = shard_activation(jnp.zeros((B, S, H), jnp.float32),
+                          ("batch", "seq", "heads"))
+    a0 = shard_activation(jnp.zeros((B, S, H, Hd), jnp.float32),
+                          ("batch", "seq", "heads", "head_dim"))
+    (m, den, acc), _ = jax.lax.scan(body, (m0, d0, a0), (kb, vb, pb))
+    out = acc / jnp.maximum(den, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def attend(params, x, positions, cfg: ModelConfig, window: int | None = None,
+           kv_block: int = KV_BLOCK):
+    """Self-attention over x [B, S, D] (train / prefill)."""
+    q, k, v = _project_qkv(params, x, positions, cfg)
+    w = cfg.sliding_window if window is None else window
+    out = _flash_attend(q, k, v, positions, positions, w, kv_block)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), (k, v)
+
+
+def decode_attend(params, x, position, cache_k, cache_v, cache_pos, slot,
+                  cfg: ModelConfig, window: int | None = None):
+    """One-token decode: x [B, 1, D], cache_k/v [B, Sc, KV, Hd].
+
+    cache_pos [B, Sc] holds the absolute position of each cache slot
+    (already updated for the CURRENT token at ``slot``; rolling buffers
+    for SWA archs reuse slots; empty slots hold a sentinel > pos and are
+    masked by causality).  The new k/v are scattered into the cache at
+    ``slot`` BEFORE attending — concatenating one token onto a
+    kv_seq-sharded cache forces GSPMD to fully rematerialize (all-gather)
+    the cache slice per layer (measured 40 GB/token on qwen3 decode_32k);
+    the in-place write touches one shard and attention runs flash-decode
+    style with the softmax reducing over the sharded seq axis.
+
+    Returns (out [B, 1, D], new cache_k, new cache_v).
+    """
+    q, k, v = _project_qkv(params, x, position, cfg)
+    w = cfg.sliding_window if window is None else window
+    B, _, H, Hd = q.shape
+    KV = k.shape[2]
+    groups = H // KV
+    cache_k = jax.vmap(lambda c, s, kn: c.at[s].set(kn[0]))(cache_k, slot, k)
+    cache_v = jax.vmap(lambda c, s, vn: c.at[s].set(vn[0]))(cache_v, slot, v)
+    keys = shard_activation(cache_k, ("batch", "kv_seq", None, None))
+    vals = shard_activation(cache_v, ("batch", "kv_seq", None, None))
+    scale = jnp.asarray(1.0 / np.sqrt(Hd), q.dtype)
+    qg = (q * scale).reshape(B, 1, KV, groups, Hd)  # local reshape (tiny)
+    s = jnp.einsum("bsghk,btgk->bsght", qg, keys,
+                   preferred_element_type=jnp.float32)
+    s = shard_activation(s, ("batch", None, None, None, "kv_seq"))
+    bias = L.causal_mask_bias(position, cache_pos, w)  # [B, 1, Sc]
+    s = s + bias[:, :, None, None, :]
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bsght,btgk->bsghk", p.astype(q.dtype), vals,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(B, 1, H, Hd).astype(x.dtype)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), keys, vals

@@ -1,0 +1,64 @@
+"""Batch construction + ShapeDtypeStruct input specs per (arch x shape).
+
+``input_specs`` is the dry-run contract: weak-type-correct, shardable
+stand-ins for every model input, with no device allocation.  ``make_batch``
+builds the matching concrete synthetic batch for smoke tests / examples.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    specs: Dict[str, Any] = {}
+    if cfg.family == "audio":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, cfg.num_codebooks, S),
+                                               jnp.int32)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.family == "vlm":
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_patches, cfg.vision_dim), jnp.bfloat16)
+    return specs
+
+
+def decode_token_specs(cfg: ModelConfig, batch: int) -> Dict[str, Any]:
+    if cfg.family == "audio":
+        tok = jax.ShapeDtypeStruct((batch, cfg.num_codebooks, 1), jnp.int32)
+    else:
+        tok = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    return {"tokens": tok,
+            "pos": jax.ShapeDtypeStruct((batch, 1), jnp.int32)}
+
+
+def make_train_batch(key, cfg: ModelConfig, batch: int, seq: int):
+    kt, kp = jax.random.split(key)
+    out = {}
+    if cfg.family == "audio":
+        out["tokens"] = jax.random.randint(
+            kt, (batch, cfg.num_codebooks, seq), 0, cfg.vocab_size, jnp.int32)
+    else:
+        out["tokens"] = jax.random.randint(
+            kt, (batch, seq), 0, cfg.vocab_size, jnp.int32)
+    if cfg.family == "vlm":
+        out["patches"] = jax.random.normal(
+            kp, (batch, cfg.num_patches, cfg.vision_dim),
+            jnp.float32).astype(jnp.bfloat16)
+    return out
+
+
+def make_decode_inputs(key, cfg: ModelConfig, batch: int, pos: int):
+    if cfg.family == "audio":
+        tok = jax.random.randint(key, (batch, cfg.num_codebooks, 1), 0,
+                                 cfg.vocab_size, jnp.int32)
+    else:
+        tok = jax.random.randint(key, (batch, 1), 0, cfg.vocab_size,
+                                 jnp.int32)
+    return {"tokens": tok,
+            "pos": jnp.full((batch, 1), pos, jnp.int32)}

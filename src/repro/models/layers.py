@@ -1,0 +1,121 @@
+"""Shared model layers: norms, rotary embeddings, MLPs, embeddings.
+
+Parameters are plain nested dicts of jnp arrays.  Every ``init_*`` has a
+matching ``*_axes`` returning the same pytree structure with *logical axis
+names* per dimension; launch/sharding.py maps those to mesh axes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+
+# ---------------------------------------------------------------------------
+# init helpers
+
+
+def dense_init(key, shape, in_axis=-2, dtype=jnp.float32):
+    fan_in = shape[in_axis]
+    return (jax.random.normal(key, shape, jnp.float32)
+            / np.sqrt(fan_in)).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    # std 1/sqrt(d_model): unit-scale lookups after gemma-style sqrt(d)
+    # input scaling, O(1) logits under tied embeddings
+    return (jax.random.normal(key, shape, jnp.float32)
+            / np.sqrt(shape[-1])).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+
+
+def rms_norm(x, scale, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def init_rms_norm(d: int, dtype=jnp.float32):
+    return jnp.zeros((d,), dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+
+
+def rope(x, positions, theta: float):
+    """Apply RoPE to x [..., S, H, Hd] with integer positions [..., S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freq  # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]  # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    x32 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x32[0] * cos - x32[1] * sin,
+                           x32[1] * cos + x32[0] * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeLU)
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None, dtype=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w_up": dense_init(k1, (d, f), -2, dtype),
+         "w_down": dense_init(k2, (f, d), -2, dtype)}
+    if cfg.mlp_act == "silu":  # SwiGLU has a gate projection
+        p["w_gate"] = dense_init(k3, (d, f), -2, dtype)
+    return p
+
+
+def mlp_axes(cfg: ModelConfig):
+    p = {"w_up": ("embed", "mlp"), "w_down": ("mlp", "embed")}
+    if cfg.mlp_act == "silu":
+        p["w_gate"] = ("embed", "mlp")
+    return p
+
+
+def mlp(params, x, cfg: ModelConfig):
+    from repro.sharding_ctx import shard_activation
+
+    up = x @ params["w_up"]
+    if cfg.mlp_act == "silu":
+        gate = jax.nn.silu((x @ params["w_gate"]).astype(jnp.float32))
+        h = (gate * up.astype(jnp.float32)).astype(x.dtype)
+    else:
+        h = jax.nn.gelu(up.astype(jnp.float32)).astype(x.dtype)
+    h = shard_activation(h, ("batch", "seq", "mlp"))
+    out = h @ params["w_down"]
+    return shard_activation(out, ("batch", "seq", "embed"))
+
+
+# ---------------------------------------------------------------------------
+# misc
+
+
+def softcap(logits, cap: float):
+    if cap and cap > 0:
+        return cap * jnp.tanh(logits / cap)
+    return logits
+
+
+NEG_INF = -1e30  # finite mask: -inf breaks online-softmax (exp(-inf+inf)=nan)
+
+
+def causal_mask_bias(q_pos, k_pos, window: int = 0):
+    """Additive bias [.., Sq, Sk]: 0 where attendable, ~-inf otherwise."""
+    ok = k_pos[..., None, :] <= q_pos[..., :, None]
+    if window and window > 0:
+        ok &= k_pos[..., None, :] > (q_pos[..., :, None] - window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)

@@ -1,0 +1,128 @@
+"""Mixture-of-Experts FFN with capacity-based sort dispatch.
+
+Top-k routing -> flatten assignments -> stable-sort by expert -> fixed
+capacity C = ceil(k*T/E * capacity_factor) slots per expert -> gather,
+batched per-expert SwiGLU, weighted scatter-combine.  Fully jittable and
+shardable:
+
+  * EP  (granite, 32e % 16 == 0): expert dim of the stacked weights maps
+    to the "model" mesh axis; the gather/scatter become all-to-alls.
+  * TP  (mixtral, 8e < 16): each expert's hidden dim maps to "model".
+
+Aux load-balancing loss (Switch-style) is returned alongside the output.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, MoEConfig
+from repro.models import layers as L
+
+
+def init_moe(key, cfg: ModelConfig):
+    m = cfg.moe
+    dtype = jnp.dtype(cfg.dtype)
+    d, f, e = cfg.d_model, cfg.d_ff, m.num_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": L.dense_init(ks[0], (d, e), -2, jnp.float32),
+        "w_gate": L.dense_init(ks[1], (e, d, f), -2, dtype),
+        "w_up": L.dense_init(ks[2], (e, d, f), -2, dtype),
+        "w_down": L.dense_init(ks[3], (e, f, d), -2, dtype),
+    }
+
+
+def moe_axes(cfg: ModelConfig):
+    return {
+        "router": ("embed", None),
+        "w_gate": ("experts", "embed", "expert_mlp"),
+        "w_up": ("experts", "embed", "expert_mlp"),
+        "w_down": ("experts", "expert_mlp", "embed"),
+    }
+
+
+def _dispatch_indices(topi, gates, E: int, C: int):
+    """[T, K] assignments -> (tok_for_slot [E*C], gate_for_slot [E*C]).
+
+    Stable sort by expert id + fixed per-expert capacity C; overflow
+    assignments land in a scratch slot and are dropped.
+    """
+    T, K = topi.shape
+    flat_e = topi.reshape(-1)                         # [T*K] expert ids
+    flat_t = jnp.arange(T * K, dtype=jnp.int32) // K  # token of assignment
+    flat_g = gates.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st_, sg = flat_e[order], flat_t[order], flat_g[order]
+    # position within expert = index - first index of this expert id
+    first = jnp.searchsorted(se, se, side="left")
+    pos = jnp.arange(T * K, dtype=jnp.int32) - first.astype(jnp.int32)
+    keep = pos < C
+    slot = jnp.where(keep, se * C + pos, E * C)  # overflow -> scratch slot
+    tok_for_slot = jnp.zeros(E * C + 1, jnp.int32).at[slot].set(st_)
+    gate_for_slot = jnp.zeros(E * C + 1, jnp.float32).at[slot].set(
+        jnp.where(keep, sg, 0.0))
+    return tok_for_slot[:-1], gate_for_slot[:-1]
+
+
+def moe_ffn(params, x, cfg: ModelConfig):
+    """x [B, S, D] -> (y [B, S, D], aux_loss scalar)."""
+    from repro.sharding_ctx import shard_activation
+
+    m: MoEConfig = cfg.moe
+    B, S, D = x.shape
+    E, K = m.num_experts, m.num_experts_per_tok
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["router"])
+    probs_full = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(logits, K)  # [B, S, K]
+    gates = jax.nn.softmax(topv, axis=-1)  # renormalize over selected
+
+    # ---- aux load-balance loss (Switch): E * sum_e f_e * P_e
+    onehot = jax.nn.one_hot(topi, E, dtype=jnp.float32)  # [B, S, K, E]
+    f_e = jnp.mean(jnp.sum(onehot, axis=2), axis=(0, 1))
+    P_e = jnp.mean(probs_full, axis=(0, 1))
+    aux = E * jnp.sum(f_e * P_e) * m.router_aux_loss_coef
+
+    if m.dispatch == "per_sample":
+        # batch-local dispatch: gathers/scatters never cross the batch
+        # shard, so a data-sharded token stream routes with zero token
+        # all-gathers (§Perf MoE iteration).  Capacity is per sample.
+        C = max(int(-(-K * S // E) * m.capacity_factor), 4)
+        tok_slot, gate_slot = jax.vmap(
+            lambda ti, g: _dispatch_indices(ti, g, E, C))(topi, gates)
+        xg = jax.vmap(lambda xb, tb: xb[tb])(x, tok_slot)  # [B, E*C, D]
+        xg = xg.reshape(B, E, C, D)
+        xg = shard_activation(xg, ("batch", "experts", None, "embed_act"))
+        gate_h = jnp.einsum("becd,edf->becf", xg, params["w_gate"])
+        up_h = jnp.einsum("becd,edf->becf", xg, params["w_up"])
+        h = (jax.nn.silu(gate_h.astype(jnp.float32))
+             * up_h.astype(jnp.float32)).astype(x.dtype)
+        h = shard_activation(h, ("batch", "experts", None, "expert_mlp"))
+        y_e = jnp.einsum("becf,efd->becd", h,
+                         params["w_down"]).reshape(B, E * C, D)
+        y = jax.vmap(
+            lambda ts, ye, gs: jnp.zeros((S, D), jnp.float32)
+            .at[ts].add(ye.astype(jnp.float32) * gs[:, None]))(
+                tok_slot, y_e, gate_slot)
+        return y.astype(x.dtype), aux
+
+    # ---- global dispatch over all B*S tokens (baseline)
+    T = B * S
+    xf = x.reshape(T, D)
+    C = max(int(-(-K * T // E) * m.capacity_factor), 4)
+    tok_for_slot, gate_for_slot = _dispatch_indices(
+        topi.reshape(T, K), gates.reshape(T, K), E, C)
+    xg = xf[tok_for_slot].reshape(E, C, D)  # [E, C, D]
+    xg = shard_activation(xg, ("experts", None, "embed_act"))
+    # per-expert SwiGLU
+    gate_h = jnp.einsum("ecd,edf->ecf", xg, params["w_gate"])
+    up_h = jnp.einsum("ecd,edf->ecf", xg, params["w_up"])
+    h = (jax.nn.silu(gate_h.astype(jnp.float32))
+         * up_h.astype(jnp.float32)).astype(x.dtype)
+    h = shard_activation(h, ("experts", None, "expert_mlp"))
+    y_e = jnp.einsum("ecf,efd->ecd", h, params["w_down"]).reshape(E * C, D)
+
+    y = jnp.zeros((T, D), jnp.float32).at[tok_for_slot].add(
+        y_e.astype(jnp.float32) * gate_for_slot[:, None])
+    return y.reshape(B, S, D).astype(x.dtype), aux

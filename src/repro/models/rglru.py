@@ -1,0 +1,109 @@
+"""RG-LRU recurrent block (RecurrentGemma), diagonal gated linear recurrence.
+
+  r_t = sigmoid(x_t W_a + b_a)            (recurrence gate)
+  i_t = sigmoid(x_t W_x + b_x)            (input gate)
+  a_t = exp(c * softplus(Lambda) * (-r_t))   with c = 8
+  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The recurrence is diagonal, so the whole sequence runs as one
+``lax.associative_scan`` over (a, b) pairs — O(log S) depth, activation
+memory O(B * S * W) like any other layer.  The full residual block is
+conv1d -> RG-LRU -> gated output (the "Hawk"/Griffin recurrent block).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+
+_C = 8.0
+
+
+def _width(cfg: ModelConfig) -> int:
+    return cfg.rglru.lru_width or cfg.d_model
+
+
+def init_rglru(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    d, w, dc = cfg.d_model, _width(cfg), cfg.rglru.conv_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "in_x": L.dense_init(ks[0], (d, w), -2, dtype),
+        "in_gate": L.dense_init(ks[1], (d, w), -2, dtype),
+        "conv_w": L.dense_init(ks[2], (dc, w), -2, dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_a": L.dense_init(ks[3], (w, w), -2, dtype),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_i": L.dense_init(ks[4], (w, w), -2, dtype),
+        "b_i": jnp.zeros((w,), jnp.float32),
+        "lam": jnp.full((w,), 2.0, jnp.float32),  # softplus(2) ~ 2.1
+        "out_proj": L.dense_init(ks[5], (w, d), -2, dtype),
+    }
+
+
+def rglru_axes(cfg: ModelConfig):
+    return {
+        "in_x": ("embed", "mlp"), "in_gate": ("embed", "mlp"),
+        "conv_w": (None, "mlp"), "conv_b": ("mlp",),
+        "w_a": ("mlp", None), "b_a": ("mlp",),
+        "w_i": ("mlp", None), "b_i": ("mlp",),
+        "lam": ("mlp",), "out_proj": ("mlp", "embed"),
+    }
+
+
+def _gates(params, xc):
+    r = jax.nn.sigmoid((xc @ params["w_a"]).astype(jnp.float32)
+                       + params["b_a"])
+    i = jax.nn.sigmoid((xc @ params["w_i"]).astype(jnp.float32)
+                       + params["b_i"])
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * xc.astype(jnp.float32))
+    return a, b
+
+
+def rglru_block(params, x, cfg: ModelConfig):
+    """x [B, S, D] -> y [B, S, D] (training / prefill)."""
+    B, S, D = x.shape
+    dc = cfg.rglru.conv_dim
+    xin = x @ params["in_x"]
+    gate = x @ params["in_gate"]
+    xpad = jnp.pad(xin, ((0, 0), (dc - 1, 0), (0, 0)))
+    xc = sum(xpad[:, i:i + S, :] * params["conv_w"][i] for i in range(dc))
+    xc = (xc + params["conv_b"]).astype(x.dtype)
+    a, b = _gates(params, xc)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = h * jax.nn.gelu(gate.astype(jnp.float32))
+    return y.astype(x.dtype) @ params["out_proj"]
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    w, dc = _width(cfg), cfg.rglru.conv_dim
+    return {
+        "conv": jnp.zeros((batch, dc - 1, w), dtype),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }
+
+
+def rglru_decode_step(params, x, cache, cfg: ModelConfig):
+    """x [B, 1, D] + cache -> (y [B, 1, D], new cache)."""
+    xin = x @ params["in_x"]  # [B, 1, w]
+    gate = x @ params["in_gate"]
+    win = jnp.concatenate([cache["conv"], xin.astype(cache["conv"].dtype)],
+                          axis=1)
+    xc = jnp.einsum("bcd,cd->bd", win, params["conv_w"]) + params["conv_b"]
+    xc = xc.astype(x.dtype)[:, None, :]
+    a, b = _gates(params, xc)
+    h = a[:, 0] * cache["h"] + b[:, 0]
+    y = h[:, None, :] * jax.nn.gelu(gate.astype(jnp.float32))
+    out = y.astype(x.dtype) @ params["out_proj"]
+    return out, {"conv": win[:, 1:], "h": h}

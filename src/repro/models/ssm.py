@@ -1,0 +1,148 @@
+"""Mamba-1 selective state-space block (falcon-mamba-7b).
+
+Train path: chunked selective scan — an outer lax.scan over sequence
+chunks carries only the [B, d_inner, d_state] boundary state (each chunk
+body is rematerialized in the backward pass), so activation memory never
+holds per-timestep states for the whole sequence.  Decode path: one
+recurrence step against carried (conv_state, ssm_state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+
+SCAN_CHUNK = 16
+
+
+def _d_inner(cfg: ModelConfig) -> int:
+    return cfg.ssm.expand * cfg.d_model
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return cfg.ssm.dt_rank or -(-cfg.d_model // 16)
+
+
+def init_mamba(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    d, di, ds = cfg.d_model, _d_inner(cfg), cfg.ssm.state_dim
+    dtr, dc = _dt_rank(cfg), cfg.ssm.conv_dim
+    ks = jax.random.split(key, 7)
+    A = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": L.dense_init(ks[0], (d, 2 * di), -2, dtype),
+        "conv_w": L.dense_init(ks[1], (dc, di), -2, dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": L.dense_init(ks[2], (di, dtr + 2 * ds), -2, dtype),
+        "dt_proj": L.dense_init(ks[3], (dtr, di), -2, dtype),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((di,), 0.01, jnp.float32))),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": L.dense_init(ks[4], (di, d), -2, dtype),
+    }
+
+
+def mamba_axes(cfg: ModelConfig):
+    return {
+        "in_proj": ("embed", "mlp"), "conv_w": (None, "mlp"),
+        "conv_b": ("mlp",), "x_proj": ("mlp", None),
+        "dt_proj": (None, "mlp"), "dt_bias": ("mlp",),
+        "A_log": ("mlp", None), "D": ("mlp",),
+        "out_proj": ("mlp", "embed"),
+    }
+
+
+def _ssm_inputs(params, xc, cfg: ModelConfig):
+    """xc [B, S, di] (post-conv) -> (dA [B,S,di,ds], dBx, C, D-term)."""
+    ds = cfg.ssm.state_dim
+    dtr = _dt_rank(cfg)
+    proj = xc @ params["x_proj"]  # [B, S, dtr + 2 ds]
+    dt_in, Bmat, Cmat = jnp.split(proj.astype(jnp.float32),
+                                  [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(dt_in @ params["dt_proj"].astype(jnp.float32)
+                         + params["dt_bias"])  # [B, S, di]
+    A = -jnp.exp(params["A_log"])  # [di, ds]
+    dA = jnp.exp(dt[..., None] * A)  # [B, S, di, ds]
+    dBx = (dt * xc.astype(jnp.float32))[..., None] * Bmat[..., None, :]
+    return dA, dBx, Cmat
+
+
+def _scan_chunk(h0, dA, dBx, Cmat):
+    """Sequential scan within one chunk; h0 [B, di, ds]."""
+
+    def step(h, inp):
+        dAt, dBxt, Ct = inp  # [B, di, ds], [B, di, ds], [B, ds]
+        h = dAt * h + dBxt
+        y = jnp.einsum("bds,bs->bd", h, Ct)
+        return h, y
+
+    xs = (dA.transpose(1, 0, 2, 3), dBx.transpose(1, 0, 2, 3),
+          Cmat.transpose(1, 0, 2))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return h, ys.transpose(1, 0, 2)  # [B, S, di]
+
+
+def mamba_block(params, x, cfg: ModelConfig, chunk: int = SCAN_CHUNK):
+    """x [B, S, D] -> y [B, S, D] (training / prefill)."""
+    B, S, D = x.shape
+    di, dc = _d_inner(cfg), cfg.ssm.conv_dim
+    xz = x @ params["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)  # [B, S, di]
+    # causal depthwise conv along seq
+    xpad = jnp.pad(xin, ((0, 0), (dc - 1, 0), (0, 0)))
+    xc = sum(xpad[:, i:i + S, :] * params["conv_w"][i] for i in range(dc))
+    xc = jax.nn.silu((xc + params["conv_b"]).astype(jnp.float32)).astype(x.dtype)
+
+    dA, dBx, Cmat = _ssm_inputs(params, xc, cfg)
+    ds = cfg.ssm.state_dim
+    nchunk = -(-S // chunk)
+    pad = nchunk * chunk - S
+    if pad:
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                     constant_values=1.0)
+        dBx = jnp.pad(dBx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+
+    def outer(h, blk):
+        dAc, dBc, Cc = blk
+        h, y = _scan_chunk(h, dAc, dBc, Cc)
+        return h, y
+
+    split = lambda a: a.reshape((B, nchunk, chunk) + a.shape[2:]) \
+        .transpose(1, 0, 2, *range(3, a.ndim + 1))
+    h0 = jnp.zeros((B, di, ds), jnp.float32)
+    _, ys = jax.lax.scan(jax.checkpoint(outer), h0,
+                         (split(dA), split(dBx), split(Cmat)))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, nchunk * chunk, di)[:, :S]
+    y = y + params["D"] * xc.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return (y.astype(x.dtype)) @ params["out_proj"]
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    di, ds, dc = _d_inner(cfg), cfg.ssm.state_dim, cfg.ssm.conv_dim
+    return {
+        "conv": jnp.zeros((batch, dc - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, ds), jnp.float32),
+    }
+
+
+def mamba_decode_step(params, x, cache, cfg: ModelConfig):
+    """x [B, 1, D] + cache -> (y [B, 1, D], new cache)."""
+    B = x.shape[0]
+    dc = cfg.ssm.conv_dim
+    xz = x @ params["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)  # [B, 1, di]
+    win = jnp.concatenate([cache["conv"], xin.astype(cache["conv"].dtype)],
+                          axis=1)  # [B, dc, di]
+    xc = jnp.einsum("bcd,cd->bd", win, params["conv_w"]) + params["conv_b"]
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)[:, None, :]
+    dA, dBx, Cmat = _ssm_inputs(params, xc, cfg)
+    h = dA[:, 0] * cache["ssm"] + dBx[:, 0]
+    y = jnp.einsum("bds,bs->bd", h, Cmat[:, 0])[:, None, :]
+    y = y + params["D"] * xc.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = y.astype(x.dtype) @ params["out_proj"]
+    return out, {"conv": win[:, 1:], "ssm": h}

@@ -1,0 +1,22 @@
+"""Optimizers: Muon(+PRISM), Shampoo(+PRISM), AdamW, compression."""
+from repro.config import OptimizerConfig
+from repro.optim import base, compression
+from repro.optim.adamw import make_adamw
+from repro.optim.muon import make_muon
+from repro.optim.shampoo import make_shampoo
+
+
+def make_optimizer(cfg: OptimizerConfig, axes_tree=None) -> base.Optimizer:
+    if cfg.name == "muon":
+        assert axes_tree is not None
+        return make_muon(cfg, axes_tree)
+    if cfg.name == "shampoo":
+        assert axes_tree is not None
+        return make_shampoo(cfg, axes_tree)
+    if cfg.name == "adamw":
+        return make_adamw(cfg)
+    raise ValueError(f"unknown optimizer {cfg.name!r}")
+
+
+__all__ = ["base", "compression", "make_adamw", "make_muon",
+           "make_shampoo", "make_optimizer"]

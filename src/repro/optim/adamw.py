@@ -1,0 +1,38 @@
+"""AdamW baseline optimizer (paper Sec. 6.2 comparison)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import OptimizerConfig
+from repro.optim import base
+
+
+def make_adamw(cfg: OptimizerConfig) -> base.Optimizer:
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"mom": z,
+                "nu": jax.tree.map(jnp.copy, z),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, step, key):
+        b1, b2 = cfg.beta1, cfg.beta2
+        t = (state["count"] + 1).astype(jnp.float32)
+        mom = jax.tree.map(lambda m, g: b1 * m + (1 - b1) *
+                           g.astype(jnp.float32), state["mom"], grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) *
+                          jnp.square(g.astype(jnp.float32)),
+                          state["nu"], grads)
+
+        def upd(p, m, v):
+            mhat = m / (1 - b1 ** t)
+            vhat = v / (1 - b2 ** t)
+            p32 = p.astype(jnp.float32)
+            p32 = p32 * (1.0 - cfg.learning_rate * cfg.weight_decay) \
+                - cfg.learning_rate * mhat / (jnp.sqrt(vhat) + cfg.eps)
+            return p32.astype(p.dtype)
+
+        new_p = jax.tree.map(upd, params, mom, nu)
+        return new_p, {"mom": mom, "nu": nu, "count": state["count"] + 1}
+
+    return base.Optimizer(init, update)

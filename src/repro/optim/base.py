@@ -1,0 +1,108 @@
+"""Optimizer interface + shared utilities (pure pytree, optax-free)."""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    """init(params) -> state;
+    update(grads, state, params, step, key) -> (new_params, new_state)."""
+
+    init: Callable[[Any], Any]
+    update: Callable[..., Tuple[Any, Any]]
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+def is_matrix_param(path_axes: tuple, shape: tuple) -> bool:
+    """Muon applies to hidden weight matrices: >=2D, both matrix dims
+    reasonably large, and not an embedding/vocab/codebook table."""
+    if any(a in ("vocab", "codebooks") for a in path_axes if a):
+        return False
+    dims = matrix_view_dims(path_axes, shape)
+    if dims is None:
+        return False
+    m, n = dims
+    return min(m, n) >= 16
+
+
+def matrix_view_dims(path_axes: tuple, shape: tuple) -> Optional[tuple]:
+    """(rows, cols) of the Muon matrix view; None if not matrix-like.
+
+    The 'embed' logical axis marks the contraction side: the matrix is
+    (embed-dim) x (product of remaining non-batch dims).  Leading 'layers'
+    / 'experts' axes are batch.  Without an 'embed' tag, the last two dims
+    form the matrix (generic case).
+    """
+    axes = tuple(path_axes)
+    batch = {"layers", "experts"}
+    non_batch = [(i, a) for i, a in enumerate(axes) if a not in batch]
+    if len(non_batch) < 2:
+        return None
+    idxs = [i for i, _ in non_batch]
+    names = [a for _, a in non_batch]
+    if "embed" in names:
+        e = idxs[names.index("embed")]
+        rest = [i for i in idxs if i != e]
+        m = shape[e]
+        n = 1
+        for i in rest:
+            n *= shape[i]
+        return (m, n)
+    m = shape[idxs[-2]]
+    n = shape[idxs[-1]]
+    for i in idxs[:-2]:
+        m *= shape[i]
+    return (m, n)
+
+
+def to_matrix_view(p: jax.Array, path_axes: tuple) -> jax.Array:
+    """Reshape p to [..batch.., m, n] with 'embed' as the row dim (possibly
+    transposed into place).  Inverse via from_matrix_view."""
+    axes = tuple(path_axes)
+    batch = {"layers", "experts"}
+    batch_idx = [i for i, a in enumerate(axes) if a in batch]
+    other_idx = [i for i, a in enumerate(axes) if a not in batch]
+    names = [axes[i] for i in other_idx]
+    if "embed" in names:
+        e = other_idx[names.index("embed")]
+        rest = [i for i in other_idx if i != e]
+        perm = batch_idx + [e] + rest
+        q = jnp.transpose(p, perm)
+        lead = tuple(p.shape[i] for i in batch_idx)
+        m = p.shape[e]
+        n = 1
+        for i in rest:
+            n *= p.shape[i]
+        return q.reshape(lead + (m, n)), (perm, q.shape)
+    lead = tuple(p.shape[i] for i in batch_idx)
+    m = p.shape[other_idx[-2]] if len(other_idx) >= 2 else 1
+    rest = tuple(p.shape[i] for i in other_idx)
+    q = jnp.transpose(p, batch_idx + other_idx)
+    mm = 1
+    for d in rest[:-1]:
+        mm *= d
+    return q.reshape(lead + (mm, rest[-1])), \
+        (batch_idx + other_idx, q.shape)
+
+
+def from_matrix_view(q: jax.Array, meta) -> jax.Array:
+    perm, mid_shape = meta
+    q = q.reshape(mid_shape)
+    inv = [0] * len(perm)
+    for i, p in enumerate(perm):
+        inv[p] = i
+    return jnp.transpose(q, inv)

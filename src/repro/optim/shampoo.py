@@ -1,0 +1,149 @@
+"""Shampoo optimizer with PRISM inverse p-th roots (paper Sec. 6.2).
+
+W <- W - lr * L^{-1/p} G R^{-1/p}   with p = 2 by default (Shi et al. 23,
+Morwani et al. 25), L/R the EMA Kronecker preconditioners G G^T / G^T G.
+
+``matfn_method`` selects how the inverse roots are computed:
+  prism (coupled PRISM-NS, distribution-free) | polar_express (coupled)
+  | newton (PRISM DB-Newton) | eigh (the classical baseline).
+
+Dims above ``max_precond_dim`` fall back to a diagonal (AdaGrad)
+preconditioner on that side.  Preconditioned updates are norm-grafted to
+the raw gradient norm for stability; inverse roots are recomputed every
+``precondition_every`` steps and cached in the state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import OptimizerConfig
+from repro.core import matfn
+from repro.optim import base
+from repro.optim.muon import _flatten_with_axes
+
+
+def _inv_root(A, p, cfg: OptimizerConfig, key):
+    eps = cfg.shampoo_eps
+    n = A.shape[-1]
+    Ad = A + eps * jnp.trace(A, axis1=-2, axis2=-1)[..., None, None] \
+        * jnp.eye(n, dtype=A.dtype) / n + eps * jnp.eye(n, dtype=A.dtype)
+    m = cfg.matfn_method
+    if m == "eigh":
+        return matfn.inv_proot(Ad, p=p, method="eigh")
+    if m == "polar_express" and p == 2:
+        return matfn.sqrtm(Ad, method="polar_express",
+                           iters=cfg.prism.iterations)[1]
+    if m == "newton" and p == 2:
+        return matfn.sqrtm(Ad, method="newton",
+                           iters=cfg.prism.iterations)[1]
+    if p == 2:
+        return matfn.sqrtm(Ad, method="prism", cfg=cfg.prism, key=key,
+                           iters=cfg.prism.iterations)[1]
+    return matfn.inv_proot(Ad, p=p, method="prism", key=key,
+                           iters=cfg.prism.iterations)
+
+
+def make_shampoo(cfg: OptimizerConfig, axes_tree,
+                 p_root: int = 2) -> base.Optimizer:
+    maxd = cfg.max_precond_dim
+
+    def init(params):
+        flat_p, flat_a, treedef = _flatten_with_axes(params, axes_tree)
+        state = []
+        for pp, a in zip(flat_p, flat_a):
+            mom = jnp.zeros(pp.shape, jnp.float32)
+            if base.is_matrix_param(a, pp.shape):
+                M, _ = base.to_matrix_view(jnp.zeros(pp.shape, jnp.float32),
+                                           a)
+                m, n = M.shape[-2], M.shape[-1]
+                lead = M.shape[:-2]
+                s = {"mom": mom}
+                if m <= maxd:
+                    s["L"] = jnp.zeros(lead + (m, m), jnp.float32)
+                    s["Linv"] = jnp.zeros(lead + (m, m), jnp.float32)
+                else:
+                    s["diagL"] = jnp.zeros(lead + (m,), jnp.float32)
+                if n <= maxd:
+                    s["R"] = jnp.zeros(lead + (n, n), jnp.float32)
+                    s["Rinv"] = jnp.zeros(lead + (n, n), jnp.float32)
+                else:
+                    s["diagR"] = jnp.zeros(lead + (n,), jnp.float32)
+                state.append(s)
+            else:
+                state.append({"mom": mom,
+                              "nu": jnp.zeros(pp.shape, jnp.float32)})
+        return {"leaves": jax.tree.unflatten(treedef, state),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, step, key):
+        flat_g, flat_a, treedef = _flatten_with_axes(grads, axes_tree)
+        flat_p = jax.tree.leaves(params)
+        flat_s = treedef.flatten_up_to(state["leaves"])
+        lr = cfg.learning_rate
+        recompute = (state["count"] % cfg.precondition_every) == 0
+        new_p, new_s = [], []
+        for i, (g, a, pp, s) in enumerate(zip(flat_g, flat_a, flat_p,
+                                              flat_s)):
+            g = g.astype(jnp.float32)
+            p32 = pp.astype(jnp.float32)
+            if base.is_matrix_param(a, pp.shape):
+                G, meta = base.to_matrix_view(g, a)
+                ns = {"mom": None}
+                beta2 = 0.999
+                kk = jax.random.fold_in(key, i) if key is not None else None
+                if "L" in s:
+                    L = beta2 * s["L"] + jnp.einsum("...mk,...nk->...mn",
+                                                    G, G)
+                    Linv = jax.lax.cond(
+                        recompute,
+                        lambda: _inv_root(L, p_root, cfg, kk),
+                        lambda: s["Linv"])
+                    ns.update(L=L, Linv=Linv)
+                    PG = Linv @ G
+                else:
+                    dL = beta2 * s["diagL"] + jnp.sum(G * G, axis=-1)
+                    ns.update(diagL=dL)
+                    PG = G / (dL[..., None] ** (1.0 / (2 * p_root))
+                              + cfg.shampoo_eps)
+                if "R" in s:
+                    R = beta2 * s["R"] + jnp.einsum("...km,...kn->...mn",
+                                                    G, G)
+                    Rinv = jax.lax.cond(
+                        recompute,
+                        lambda: _inv_root(R, p_root, cfg,
+                                          jax.random.fold_in(kk, 1)
+                                          if kk is not None else None),
+                        lambda: s["Rinv"])
+                    ns.update(R=R, Rinv=Rinv)
+                    PG = PG @ Rinv
+                else:
+                    dR = beta2 * s["diagR"] + jnp.sum(G * G, axis=-2)
+                    ns.update(diagR=dR)
+                    PG = PG / (dR[..., None, :] ** (1.0 / (2 * p_root))
+                               + cfg.shampoo_eps)
+                # norm grafting to the raw gradient
+                gn = jnp.sqrt(jnp.sum(G * G, axis=(-2, -1), keepdims=True))
+                pn = jnp.sqrt(jnp.sum(PG * PG, axis=(-2, -1), keepdims=True))
+                PG = PG * gn / jnp.maximum(pn, 1e-12)
+                upd = base.from_matrix_view(PG, meta)
+                mom = cfg.momentum * s["mom"] + upd
+                ns["mom"] = mom
+                p32 = p32 * (1.0 - lr * cfg.weight_decay) - lr * mom
+                new_s.append(ns)
+            else:
+                b1, b2 = cfg.beta1, cfg.beta2
+                mom = b1 * s["mom"] + (1 - b1) * g
+                nu = b2 * s["nu"] + (1 - b2) * jnp.square(g)
+                t = (state["count"] + 1).astype(jnp.float32)
+                alr = lr
+                p32 = p32 * (1.0 - alr * cfg.weight_decay) - alr * (
+                    mom / (1 - b1 ** t)) / (
+                        jnp.sqrt(nu / (1 - b2 ** t)) + cfg.eps)
+                new_s.append({"mom": mom, "nu": nu})
+            new_p.append(p32.astype(pp.dtype))
+        return (jax.tree.unflatten(treedef, new_p),
+                {"leaves": jax.tree.unflatten(treedef, new_s),
+                 "count": state["count"] + 1})
+
+    return base.Optimizer(init, update)

@@ -1,0 +1,28 @@
+"""Serving steps: prefill (last-token logits) + single-token decode."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import Model
+
+
+def make_prefill_step(model: Model) -> Callable:
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+
+    return prefill_step
+
+
+def make_serve_step(model: Model, greedy: bool = True) -> Callable:
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = model.decode_step(params, cache, tokens, pos)
+        if greedy:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            nxt = None
+        return logits, nxt, cache
+
+    return serve_step

@@ -1,0 +1,4 @@
+from repro.train.state import make_train_step, master_params
+from repro.train.trainer import Trainer
+
+__all__ = ["Trainer", "make_train_step", "master_params"]

@@ -1,0 +1,65 @@
+"""Fault-tolerance watchdog utilities.
+
+On a real fleet a per-host supervisor watches the trainer's HEARTBEAT file
+(touched every step) and escalates: log -> preempt slow host -> restart
+from the newest checkpoint.  ``Watchdog`` implements the detection logic
+in a runner-agnostic way so it is unit-testable on CPU; the trainer writes
+the heartbeat, this class judges it.
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass
+from typing import Optional
+
+
+@dataclass
+class WatchdogConfig:
+    stale_after_s: float = 300.0     # no heartbeat -> presume hang
+    max_step_regression: int = 0     # heartbeat step must not go backwards
+
+
+class Watchdog:
+    def __init__(self, heartbeat_path: str,
+                 cfg: WatchdogConfig = WatchdogConfig()):
+        self.path = heartbeat_path
+        self.cfg = cfg
+        self.last_step: Optional[int] = None
+
+    def read(self):
+        """(step, wall_time) from the heartbeat file, or None."""
+        try:
+            with open(self.path) as f:
+                step_s, t_s = f.read().split()
+            return int(step_s), float(t_s)
+        except (FileNotFoundError, ValueError):
+            return None
+
+    def check(self, now: Optional[float] = None) -> str:
+        """'ok' | 'missing' | 'stale' | 'regressed'."""
+        now = time.time() if now is None else now
+        hb = self.read()
+        if hb is None:
+            return "missing"
+        step, t = hb
+        if now - t > self.cfg.stale_after_s:
+            return "stale"
+        if self.last_step is not None and \
+                step < self.last_step - self.cfg.max_step_regression:
+            return "regressed"
+        self.last_step = step
+        return "ok"
+
+    def should_restart(self, now: Optional[float] = None) -> bool:
+        return self.check(now) in ("stale", "regressed")
+
+
+def latest_restart_point(ckpt_dir: str) -> Optional[int]:
+    """Step to restart from after a fault (newest COMPLETE checkpoint —
+    crash-mid-write temp dirs are ignored by construction)."""
+    from repro.checkpoint import latest_step
+
+    if not os.path.isdir(ckpt_dir):
+        return None
+    return latest_step(ckpt_dir)

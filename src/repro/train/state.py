@@ -1,0 +1,84 @@
+"""Train-step construction: mixed precision, clipping, compression, Muon.
+
+Master parameters live in fp32; the forward/backward runs in each param's
+model dtype (bf16 matrices, fp32 norms/ssm constants).  The PRISM sketch
+key is derived from the step counter inside the jitted step, so the step
+signature stays (params, opt_state, batch, step) — clean to lower and to
+checkpoint.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import OptimizerConfig
+from repro.models.transformer import Model
+from repro.optim import base, compression
+
+
+def master_params(params):
+    return jax.tree.map(lambda p: p.astype(jnp.float32), params)
+
+
+def make_train_step(model: Model, opt: base.Optimizer,
+                    ocfg: OptimizerConfig) -> Callable:
+    cast_tree = model.param_dtypes()
+
+    def train_step(params, opt_state, batch, step):
+        if ocfg.grads_dtype == "bfloat16":
+            # differentiate wrt the bf16 compute params: the DP gradient
+            # reduce-scatter then moves bf16 (half the wire bytes); the
+            # fp32 master update converts afterwards.
+            pc = jax.tree.map(lambda x, dt: x.astype(dt), params, cast_tree)
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda q: model.loss(q, batch), has_aux=True)(pc)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            def loss_fn(p):
+                pc = jax.tree.map(lambda x, dt: x.astype(dt), p, cast_tree)
+                return model.loss(pc, batch)
+
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
+        grads, gnorm = base.clip_by_global_norm(grads, ocfg.grad_clip_norm)
+        if ocfg.gradient_compression == "int8":
+            grads = compression.int8_roundtrip(grads)
+        key = jax.random.fold_in(jax.random.PRNGKey(0), step)
+        params, opt_state = opt.update(grads, opt_state, params, step, key)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def opt_state_shardings(mesh, opt: base.Optimizer, param_shapes,
+                        param_shardings):
+    """Sharding tree for the optimizer state: per-param buffers matching
+    the param's shape inherit its sharding; everything else replicates."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    state_shapes = jax.eval_shape(opt.init, param_shapes)
+    rep = NamedSharding(mesh, P())
+    if "leaves" not in state_shapes:
+        # adamw: state trees mirror params exactly
+        def like(tree):
+            return jax.tree.map(
+                lambda s, sh: sh if hasattr(s, "shape") and s.shape else rep,
+                tree, param_shardings)
+
+        return {k: (like(v) if isinstance(v, dict) else rep)
+                for k, v in state_shapes.items()}
+
+    is_slot = lambda x: isinstance(x, dict) and "mom" in x
+
+    def per_param(slot, pshape, pshard):
+        out = {}
+        for k, v in slot.items():
+            out[k] = pshard if tuple(v.shape) == tuple(pshape.shape) else rep
+        return out
+
+    leaves = jax.tree.map(per_param, state_shapes["leaves"], param_shapes,
+                          param_shardings, is_leaf=is_slot)
+    return {"leaves": leaves, "count": rep}

@@ -1,0 +1,13 @@
+import os
+
+# Tests run on the single real CPU device; only launch/dryrun spawns the
+# 512-placeholder-device world (in a subprocess, per the brief).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,110 @@
+"""Convergence-behavior tests: the paper's Theorems 1-2 and headline claims."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import PrismConfig
+from repro.core import matfn
+from repro.core import newton_schulz as ns
+from repro.core import random_matrices as rm
+
+
+def _iters_to_tol(residuals, n, tol=1e-3):
+    r = np.asarray(residuals) / np.sqrt(n)
+    hit = np.nonzero(r < tol)[0]
+    return int(hit[0]) if hit.size else len(r)
+
+
+def test_theorem1_rate_d1_exact_fit(key):
+    """Thm 1: d=1, exact fit, ||R_k||_2 <= ||R_0||_2^(2^(k-2))."""
+    A = rm.spd_with_eigs(key, 48, jnp.linspace(0.3, 0.999, 48))
+    A = A / jnp.linalg.norm(A, 2)  # ||A||_2 <= 1, A symmetric => A^2 symmetric
+    cfg = PrismConfig(degree=1, sketch_dim=0)
+    X, info = matfn.signm(A, method="prism", cfg=cfg, iters=10,
+                          return_info=True)
+    # spectral norms of residuals
+    r0 = float(jnp.linalg.norm(jnp.eye(48) - A @ A, 2))
+    Xk = A
+    # recompute residual spectral norms along the trajectory via the info's
+    # Frobenius proxy: Frobenius upper-bounds spectral, so the bound in
+    # Frobenius/sqrt(n)-form is implied if we allow the sqrt(n) slack.
+    rF = np.asarray(info.residual_fro)
+    for k in range(2, len(rF)):
+        bound = r0 ** (2 ** (k - 2))
+        assert rF[k] / np.sqrt(48) <= max(bound, 5e-5) * 1.5, (k, rF[k], bound)
+
+
+def test_alphas_stay_in_bounds(key):
+    for d, (lo, hi) in [(1, (0.5, 1.0)), (2, (3 / 8, 29 / 20))]:
+        cfg = PrismConfig(degree=d, sketch_dim=8)
+        A = rm.log_uniform_spectrum(key, 64, 64, 1e-6)
+        _, info = matfn.polar(A, method="prism", cfg=cfg, key=key, iters=15,
+                              return_info=True)
+        al = np.asarray(info.alphas)
+        assert np.all(al >= lo - 1e-5) and np.all(al <= hi + 1e-5)
+
+
+@pytest.mark.parametrize("smin", [1e-2, 1e-4, 1e-6, 1e-8])
+def test_prism_at_least_as_fast_as_classical(key, smin):
+    """The paper's headline: PRISM never slower than classical NS
+    (iteration count to fixed tolerance), across spectral ranges."""
+    A = rm.log_uniform_spectrum(key, 128, 128, smin)
+    cfg = PrismConfig(degree=2, sketch_dim=8)
+    _, info_p = matfn.polar(A, method="prism", cfg=cfg, key=key, iters=40,
+                            return_info=True)
+    _, info_c = matfn.polar(A, method="newton_schulz", cfg=cfg, iters=40,
+                            return_info=True)
+    it_p = _iters_to_tol(info_p.residual_fro, 128)
+    it_c = _iters_to_tol(info_c.residual_fro, 128)
+    assert it_p <= it_c, (it_p, it_c)
+
+
+def test_prism_robust_to_sigma_min_mismatch(key):
+    """Fig. 1: PolarExpress (tuned for 1e-3) degrades for much smaller
+    sigma_min; PRISM keeps converging fast without knowing sigma_min."""
+    A = rm.log_uniform_spectrum(key, 128, 128, 1e-9)
+    cfg = PrismConfig(degree=2, sketch_dim=8)
+    _, info_p = matfn.polar(A, method="prism", cfg=cfg, key=key, iters=40,
+                            return_info=True)
+    _, fros_pe = matfn.polar(A, method="polar_express", iters=40,
+                             return_info=True)
+    it_p = _iters_to_tol(info_p.residual_fro, 128)
+    it_pe = _iters_to_tol(fros_pe, 128)
+    assert it_p <= it_pe, (it_p, it_pe)
+
+
+def test_sketched_matches_exact_fit_rate(key):
+    """Thm 2 in practice: p=8 sketch converges ~as fast as the exact fit."""
+    A = rm.log_uniform_spectrum(key, 256, 256, 1e-6)
+    cfg_s = PrismConfig(degree=2, sketch_dim=8)
+    cfg_e = PrismConfig(degree=2, sketch_dim=0)
+    _, info_s = matfn.polar(A, method="prism", cfg=cfg_s, key=key, iters=30,
+                            return_info=True)
+    _, info_e = matfn.polar(A, method="prism", cfg=cfg_e, iters=30,
+                            return_info=True)
+    it_s = _iters_to_tol(info_s.residual_fro, 256)
+    it_e = _iters_to_tol(info_e.residual_fro, 256)
+    assert abs(it_s - it_e) <= 2, (it_s, it_e)
+
+
+def test_htmp_heavy_tail_convergence(key):
+    """Fig. 4 regime: heavy-tailed spectra; PRISM stays fast."""
+    for kappa in [0.1, 0.5, 100.0]:
+        A = rm.htmp(key, 128, 64, kappa)
+        cfg = PrismConfig(degree=2, sketch_dim=8)
+        _, info = matfn.polar(A, method="prism", cfg=cfg, key=key, iters=40,
+                              return_info=True)
+        assert np.asarray(info.residual_fro)[-1] < 1e-2
+
+
+def test_warm_alpha_schedule(key):
+    """Paper Sec. C trick: alpha pinned to u for the first iterations."""
+    cfg = PrismConfig(degree=2, sketch_dim=8, warm_alpha_iters=3)
+    A = rm.gaussian(key, 96, 48)
+    _, info = matfn.polar(A, method="prism", cfg=cfg, key=key, iters=8,
+                          return_info=True)
+    al = np.asarray(info.alphas)
+    np.testing.assert_allclose(al[:3], 29 / 20, atol=1e-6)
+    # and convergence still happens
+    assert np.asarray(info.residual_fro)[-1] < 1e-1

@@ -1,0 +1,74 @@
+"""Watchdog + int8-psum shard_map collective tests."""
+import os
+import subprocess
+import sys
+import textwrap
+import time
+
+from repro.train.fault import Watchdog, WatchdogConfig, latest_restart_point
+
+
+def test_watchdog_states(tmp_path):
+    hb = tmp_path / "HEARTBEAT"
+    wd = Watchdog(str(hb), WatchdogConfig(stale_after_s=10))
+    assert wd.check() == "missing"
+    hb.write_text(f"5 {time.time()}")
+    assert wd.check() == "ok"
+    assert not wd.should_restart()
+    # stale heartbeat
+    hb.write_text(f"6 {time.time() - 100}")
+    assert wd.check() == "stale"
+    assert wd.should_restart()
+    # regression (restarted host reports older step while we expect newer)
+    hb.write_text(f"2 {time.time()}")
+    wd2 = Watchdog(str(hb), WatchdogConfig(stale_after_s=1000))
+    wd2.last_step = 6
+    assert wd2.check() == "regressed"
+
+
+def test_latest_restart_point(tmp_path):
+    import jax.numpy as jnp
+
+    from repro import checkpoint as ckpt
+
+    assert latest_restart_point(str(tmp_path / "nope")) is None
+    ckpt.save(str(tmp_path), 7, {"x": jnp.ones(2)})
+    os.makedirs(tmp_path / "step_00000009.tmp")  # crashed write
+    assert latest_restart_point(str(tmp_path)) == 7
+
+
+INT8_PSUM_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import sys
+    sys.path.insert(0, "src")
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.optim.compression import int8_psum
+
+    mesh = jax.make_mesh((4,), ("pod",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    x = jnp.asarray(np.random.RandomState(0).randn(4, 1000), jnp.float32)
+
+    f = jax.shard_map(lambda a: int8_psum(a[0], "pod"), mesh=mesh,
+                      in_specs=P("pod"), out_specs=P())
+    with mesh:
+        got = f(x)
+    want = np.sum(np.asarray(x), axis=0)
+    err = np.abs(np.asarray(got) - want)
+    # blockwise int8: error bounded by sum of per-shard quant steps
+    bound = 4 * np.abs(x).max() / 127 + 1e-5
+    assert err.max() <= bound, (err.max(), bound)
+    print("INT8_PSUM_OK", err.max())
+""")
+
+
+def test_int8_psum_shard_map():
+    env = dict(os.environ)
+    env.pop("JAX_PLATFORMS", None)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run([sys.executable, "-c", INT8_PSUM_SCRIPT],
+                         cwd="/root/repo", env=env, capture_output=True,
+                         text=True, timeout=300)
+    assert "INT8_PSUM_OK" in out.stdout, out.stdout + out.stderr[-2000:]

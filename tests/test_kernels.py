@@ -1,0 +1,140 @@
+"""Per-kernel allclose sweeps: Pallas (interpret mode) vs ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import gram as gram_kernel
+from repro.kernels import matmul_add as mma_kernel
+from repro.kernels import ref
+from repro.kernels import sketch_traces as sk_kernel
+
+SHAPES_MM = [
+    (8, 8, 8),
+    (128, 128, 128),
+    (256, 128, 64),
+    (100, 70, 130),   # non-divisible => padding path
+    (512, 256, 384),
+    (33, 257, 129),
+]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES_MM)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_matmul_add_sweep(key, m, k, n, dtype):
+    ka, kb, kc = jax.random.split(key, 3)
+    A = jax.random.normal(ka, (m, k), jnp.float32).astype(dtype)
+    B = jax.random.normal(kb, (k, n), jnp.float32).astype(dtype)
+    C = jax.random.normal(kc, (m, n), jnp.float32).astype(dtype)
+    got = mma_kernel.matmul_add(A, B, C, alpha=0.7, beta=-1.3,
+                                bm=128, bn=128, bk=64, interpret=True)
+    want = ref.matmul_add(A, B, C, alpha=0.7, beta=-1.3)
+    np.testing.assert_allclose(got.astype(jnp.float32),
+                               want.astype(jnp.float32), **_tol(dtype))
+
+
+def test_matmul_add_no_c(key):
+    A = jax.random.normal(key, (96, 64))
+    B = jax.random.normal(jax.random.fold_in(key, 1), (64, 72))
+    got = mma_kernel.matmul_add(A, B, alpha=2.0, bm=64, bn=64, bk=32,
+                                interpret=True)
+    np.testing.assert_allclose(got, 2.0 * (A @ B), rtol=2e-5, atol=2e-5)
+
+
+GRAM_SHAPES = [(64, 64), (128, 256), (256, 128), (200, 100), (96, 33)]
+
+
+@pytest.mark.parametrize("m,n", GRAM_SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_gram_sweep(key, m, n, dtype):
+    X = jax.random.normal(key, (m, n), jnp.float32).astype(dtype)
+    U = gram_kernel.gram_upper(X, alpha=1.0, beta=-1.0, bn=64, bk=64,
+                               interpret=True)
+    got = gram_kernel.mirror_upper(U, min(64, n))
+    want = ref.gram(X, alpha=1.0, beta=-1.0)
+    np.testing.assert_allclose(got.astype(jnp.float32),
+                               want.astype(jnp.float32), **_tol(dtype))
+
+
+def test_gram_upper_blocks_correct(key):
+    """Upper blocks are exact; lower blocks are undefined (never visited —
+    that's the saved MXU work) and masked out by mirror_upper."""
+    X = jax.random.normal(key, (64, 256))
+    U = np.asarray(gram_kernel.gram_upper(X, alpha=0.0, beta=1.0, bn=64,
+                                          bk=64, interpret=True))
+    W = np.asarray(ref.gram(X, alpha=0.0, beta=1.0))
+    for i in range(4):
+        for j in range(i, 4):
+            np.testing.assert_allclose(U[i * 64:(i + 1) * 64,
+                                         j * 64:(j + 1) * 64],
+                                       W[i * 64:(i + 1) * 64,
+                                         j * 64:(j + 1) * 64],
+                                       rtol=2e-5, atol=2e-5)
+
+
+def test_unrank_upper_exhaustive():
+    """Closed-form triangle unranking is exact for every nb up to 40."""
+    import jax.numpy as jnp
+    for nb in [1, 2, 3, 7, 16, 40]:
+        ts = jnp.arange(nb * (nb + 1) // 2)
+        i, j = gram_kernel._unrank_upper(ts, nb)
+        want = np.asarray(np.triu_indices(nb))
+        np.testing.assert_array_equal(np.asarray(i), want[0])
+        np.testing.assert_array_equal(np.asarray(j), want[1])
+
+
+@pytest.mark.parametrize("n,p,maxp", [(64, 8, 6), (200, 8, 10), (256, 16, 6),
+                                      (130, 4, 4)])
+def test_sketch_traces_sweep(key, n, p, maxp):
+    kr, ks = jax.random.split(key)
+    R = jax.random.normal(kr, (n, n)) / np.sqrt(n)
+    R = 0.5 * (R + R.T)
+    S = jax.random.normal(ks, (p, n)) / np.sqrt(p)
+    St = jnp.pad(S.T, ((0, 0), (0, (-p) % 128)))
+    V = St
+    ts = [float(jnp.sum(St * St))]
+    for _ in range(maxp):
+        V, t = sk_kernel.sketch_step(R, V, St, bm=64, bk=64, interpret=True)
+        ts.append(float(t))
+    want = np.asarray(ref.sketch_traces(R, S, maxp))
+    np.testing.assert_allclose(np.asarray(ts), want, rtol=2e-4, atol=2e-4)
+
+
+def test_ops_dispatch_ref_on_cpu(key):
+    """ops.py must fall back to the jnp oracle on CPU by default."""
+    from repro.kernels import ops
+
+    A = jax.random.normal(key, (3, 32, 16))  # batched
+    B = jax.random.normal(jax.random.fold_in(key, 1), (3, 16, 24))
+    got = ops.matmul_add(A, B, alpha=1.0)
+    np.testing.assert_allclose(got, A @ B, rtol=2e-5, atol=2e-5)
+    R = jax.random.normal(key, (2, 48, 48)) / 7
+    R = 0.5 * (R + jnp.swapaxes(R, -1, -2))
+    S = jax.random.normal(key, (8, 48)) / np.sqrt(8)
+    got = ops.sketch_traces(R, S, 4)
+    want = ref.sketch_traces(R, S, 4)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_prism_with_interpret_kernels_end_to_end(key, monkeypatch):
+    """PRISM polar with use_kernels=True (interpret) == pure-jnp result."""
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "interpret")
+    from repro.config import PrismConfig
+    from repro.core import matfn
+
+    A = jax.random.normal(key, (96, 48))
+    Xk = matfn.polar(A, method="prism",
+                     cfg=PrismConfig(degree=2, sketch_dim=8, use_kernels=True),
+                     key=key, iters=6)
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "ref")
+    Xr = matfn.polar(A, method="prism",
+                     cfg=PrismConfig(degree=2, sketch_dim=8, use_kernels=True),
+                     key=key, iters=6)
+    np.testing.assert_allclose(np.asarray(Xk), np.asarray(Xr),
+                               rtol=5e-3, atol=5e-3)

@@ -1,0 +1,157 @@
+"""Every Table-1 algorithm validated against dense linear-algebra oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import PrismConfig
+from repro.core import matfn
+from repro.core import random_matrices as rm
+
+CFG2 = PrismConfig(degree=2, sketch_dim=8)
+CFG1 = PrismConfig(degree=1, sketch_dim=8)
+
+
+def _rel(a, b):
+    return float(jnp.linalg.norm(a - b) / jnp.linalg.norm(b))
+
+
+# ---------------------------------------------------------------- polar
+
+@pytest.mark.parametrize("method,kw", [
+    ("prism", dict(cfg=CFG2, iters=12)),
+    ("prism", dict(cfg=CFG1, iters=20)),
+    ("prism", dict(cfg=PrismConfig(degree=2, sketch_dim=0), iters=12)),
+    ("newton_schulz", dict(cfg=CFG2, iters=30)),
+    ("polar_express", dict(iters=14)),
+])
+def test_polar_matches_svd(key, method, kw):
+    A = rm.log_uniform_spectrum(key, 96, 64, 1e-3)
+    if method == "prism" and "key" not in kw:
+        kw = dict(kw, key=key)
+    X = matfn.polar(A, method=method, **kw)
+    ref = matfn.polar(A, method="svd")
+    assert _rel(X, ref) < 5e-3
+
+
+def test_polar_wide_matrix(key):
+    A = rm.log_uniform_spectrum(key, 48, 80, 1e-2)
+    X = matfn.polar(A, method="prism", cfg=CFG2, key=key, iters=12)
+    ref = matfn.polar(A, method="svd")
+    assert X.shape == A.shape
+    assert _rel(X, ref) < 5e-3
+
+
+def test_polar_batched_matches_loop(key):
+    A = jax.random.normal(key, (3, 40, 24))
+    Xb = matfn.polar(A, method="prism", cfg=CFG2, key=key, iters=10)
+    for i in range(3):
+        Xi = matfn.polar(A[i], method="prism", cfg=CFG2, key=key, iters=10)
+        # same sketch key stream => identical results
+        np.testing.assert_allclose(Xb[i], Xi, rtol=2e-4, atol=2e-4)
+
+
+def test_polar_orthogonality(key):
+    A = rm.gaussian(key, 128, 64)
+    X = matfn.polar(A, method="prism", cfg=CFG2, key=key, iters=10)
+    eye = jnp.eye(64)
+    assert float(jnp.linalg.norm(X.T @ X - eye)) / 8.0 < 1e-2
+
+
+def test_polar_bf16_no_nan(key):
+    A = rm.gaussian(key, 64, 64).astype(jnp.bfloat16)
+    X = matfn.polar(A, method="prism", cfg=CFG2, key=key, iters=8)
+    assert X.dtype == jnp.bfloat16
+    assert not bool(jnp.any(jnp.isnan(X.astype(jnp.float32))))
+
+
+# ---------------------------------------------------------------- sqrtm
+
+@pytest.mark.parametrize("method,kw", [
+    ("prism", dict(cfg=CFG2, iters=15)),
+    ("newton_schulz", dict(cfg=CFG2, iters=40)),
+    ("polar_express", dict(iters=15)),
+    ("newton", dict(iters=15)),
+    ("newton_classical", dict(iters=25)),
+])
+def test_sqrtm_matches_eigh(key, method, kw):
+    A = rm.spd_with_eigs(key, 96, jnp.linspace(1e-3, 1.0, 96))
+    if method == "prism":
+        kw = dict(kw, key=key)
+    sq, isq = matfn.sqrtm(A, method=method, **kw)
+    sq_ref, isq_ref = matfn.sqrtm(A, method="eigh")
+    assert _rel(sq, sq_ref) < 1e-3
+    assert _rel(isq, isq_ref) < 5e-3
+    # defining property
+    assert _rel(sq @ sq, A) < 5e-3
+
+
+def test_sqrt_stability_after_convergence(key):
+    """Regression: Thm-3 coupling (R = I - YX) must stay converged.
+
+    The R = I - XY coupling diverges within ~3 iterations of convergence
+    even in fp64 (classical coupled-NS instability).
+    """
+    A = rm.spd_with_eigs(key, 128, jnp.linspace(1e-4, 1.0, 128))
+    (_, _), info = matfn.sqrtm(A, method="prism", cfg=CFG2, key=key,
+                               iters=25, return_info=True)
+    r = np.asarray(info.residual_fro)
+    assert np.all(np.isfinite(r))
+    assert r[-1] < 1e-3  # still converged at iteration 25
+
+
+# ---------------------------------------------------------------- signm
+
+def test_signm_symmetric_matches_eigh(key):
+    eigs = jnp.concatenate([jnp.linspace(-1.0, -0.05, 32),
+                            jnp.linspace(0.05, 1.0, 32)])
+    A = rm.spd_with_eigs(key, 64, eigs)
+    S = matfn.signm(A, method="prism", cfg=CFG2, key=key, iters=14)
+    ref = matfn.signm(A, method="eigh")
+    assert _rel(S, ref) < 5e-3
+    assert _rel(S @ S, jnp.eye(64)) < 5e-3
+
+
+def test_signm_classical(key):
+    eigs = jnp.concatenate([jnp.linspace(-1.0, -0.2, 16),
+                            jnp.linspace(0.2, 1.0, 16)])
+    A = rm.spd_with_eigs(key, 32, eigs)
+    S = matfn.signm(A, method="newton_schulz", cfg=CFG2, iters=40)
+    assert _rel(S, matfn.signm(A, method="eigh")) < 5e-3
+
+
+# ---------------------------------------------------------------- inverse
+
+@pytest.mark.parametrize("method", ["prism_chebyshev", "chebyshev",
+                                    "inverse_newton"])
+def test_inv_matches_solve(key, method):
+    A = rm.spd_with_eigs(key, 64, jnp.linspace(0.05, 1.0, 64))
+    X = matfn.inv(A, method=method, iters=40, key=key)
+    ref = matfn.inv(A, method="solve")
+    assert _rel(X, ref) < 1e-3
+
+
+def test_inv_nonsymmetric(key):
+    # Chebyshev iteration does not require symmetry (X0 = A^T)
+    A = rm.gaussian(key, 48, 48) / 10 + jnp.eye(48)
+    X = matfn.inv(A, method="prism_chebyshev", iters=40, key=key)
+    assert _rel(A @ X, jnp.eye(48)) < 1e-3
+
+
+# ---------------------------------------------------------------- inv roots
+
+@pytest.mark.parametrize("p", [1, 2, 3, 4])
+def test_inv_proot_matches_eigh(key, p):
+    A = rm.spd_with_eigs(key, 64, jnp.linspace(0.1, 1.0, 64))
+    X = matfn.inv_proot(A, p=p, iters=40, key=key)
+    ref = matfn.inv_proot(A, p=p, method="eigh")
+    assert _rel(X, ref) < 2e-3
+
+
+def test_inv_sqrtm_consistency(key):
+    A = rm.spd_with_eigs(key, 64, jnp.linspace(0.05, 1.0, 64))
+    Y1 = matfn.inv_sqrtm(A, method="prism", cfg=CFG2, key=key, iters=20)
+    Y2 = matfn.inv_sqrtm(A, method="inverse_newton", iters=30, key=key)
+    ref = matfn.sqrtm(A, method="eigh")[1]
+    assert _rel(Y1, ref) < 5e-3
+    assert _rel(Y2, ref) < 5e-3

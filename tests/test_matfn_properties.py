@@ -1,0 +1,85 @@
+"""Hypothesis property tests on matrix-function invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.config import PrismConfig
+from repro.core import matfn
+from repro.core import random_matrices as rm
+
+CFG = PrismConfig(degree=2, sketch_dim=8)
+
+
+def _mat(seed, n, m, smin):
+    key = jax.random.PRNGKey(seed)
+    return rm.log_uniform_spectrum(key, n, m, smin)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([24, 40, 64]),
+       st.floats(1e-3, 0.9))
+def test_polar_idempotent(seed, n, smin):
+    """polar(polar(A)) == polar(A): the polar factor is a fixed point."""
+    A = _mat(seed, n + 16, n, smin)
+    key = jax.random.PRNGKey(seed + 1)
+    X = matfn.polar(A, method="prism", cfg=CFG, key=key, iters=20)
+    X2 = matfn.polar(X, method="prism", cfg=CFG, key=key, iters=6)
+    np.testing.assert_allclose(np.asarray(X2), np.asarray(X),
+                               rtol=5e-3, atol=5e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([16, 48]))
+def test_sign_is_involution(seed, n):
+    """sign(A)^2 == I for symmetric nonsingular A."""
+    key = jax.random.PRNGKey(seed)
+    eigs = jnp.concatenate([jnp.linspace(-1, -0.15, n // 2),
+                            jnp.linspace(0.15, 1, n - n // 2)])
+    A = rm.spd_with_eigs(key, n, eigs)
+    S = matfn.signm(A, method="prism", cfg=CFG, key=key, iters=16)
+    np.testing.assert_allclose(np.asarray(S @ S), np.eye(n),
+                               rtol=0, atol=2e-2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([16, 32]),
+       st.floats(0.05, 0.8))
+def test_sqrt_squares_back(seed, n, lo):
+    key = jax.random.PRNGKey(seed)
+    A = rm.spd_with_eigs(key, n, jnp.linspace(lo, 1.0, n))
+    sq, isq = matfn.sqrtm(A, method="prism", cfg=CFG, key=key, iters=18)
+    np.testing.assert_allclose(np.asarray(sq @ sq), np.asarray(A),
+                               rtol=0, atol=2e-2)
+    # sqrt and inv-sqrt are mutual inverses
+    np.testing.assert_allclose(np.asarray(sq @ isq), np.eye(n),
+                               rtol=0, atol=2e-2)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([2, 3, 4]))
+def test_inv_proot_power_consistency(seed, p):
+    """(A^{-1/p})^p == A^{-1}."""
+    key = jax.random.PRNGKey(seed)
+    n = 24
+    A = rm.spd_with_eigs(key, n, jnp.linspace(0.2, 1.0, n))
+    X = matfn.inv_proot(A, p=p, iters=30, key=key)
+    Xp = X
+    for _ in range(p - 1):
+        Xp = Xp @ X
+    np.testing.assert_allclose(np.asarray(Xp @ A), np.eye(n),
+                               rtol=0, atol=3e-2)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000))
+def test_polar_orthogonal_invariance(seed):
+    """polar(Q A) == Q polar(A) for orthogonal Q (left invariance)."""
+    key = jax.random.PRNGKey(seed)
+    n = 32
+    A = _mat(seed, n, n, 1e-2)
+    Q, _ = jnp.linalg.qr(jax.random.normal(key, (n, n)))
+    X1 = matfn.polar(Q @ A, method="prism", cfg=CFG, key=key, iters=16)
+    X2 = Q @ matfn.polar(A, method="prism", cfg=CFG, key=key, iters=16)
+    np.testing.assert_allclose(np.asarray(X1), np.asarray(X2),
+                               rtol=5e-3, atol=5e-3)

@@ -1,0 +1,155 @@
+"""Optimizer tests: Muon/Shampoo/AdamW reduce loss on a real model;
+matrix-view plumbing; compression roundtrip properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import OptimizerConfig, PrismConfig
+from repro.configs import get_smoke_config
+from repro.data import DataConfig, make_batch_fn
+from repro.models import build
+from repro.optim import base, compression, make_optimizer
+
+
+def _train(arch, ocfg, steps=12, seed=0):
+    cfg = get_smoke_config(arch)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    opt = make_optimizer(ocfg, model.logical_axes())
+    state = opt.init(params)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8,
+                      markov_rank=8)
+    batch_fn = make_batch_fn(cfg, dcfg)
+
+    @jax.jit
+    def step_fn(params, state, step):
+        batch = batch_fn(step)
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: model.loss(p, batch), has_aux=True)(params)
+        grads, _ = base.clip_by_global_norm(grads, ocfg.grad_clip_norm)
+        params, state = opt.update(grads, state, params, step,
+                                   jax.random.fold_in(
+                                       jax.random.PRNGKey(7), step))
+        return params, state, loss
+
+    losses = []
+    for t in range(steps):
+        params, state, loss = step_fn(params, state, jnp.asarray(t))
+        losses.append(float(loss))
+    return losses
+
+
+@pytest.mark.parametrize("name,method", [
+    ("muon", "prism"),
+    ("muon", "polar_express"),
+    ("muon", "newton_schulz"),
+    ("adamw", None),
+])
+def test_optimizers_reduce_loss(name, method):
+    ocfg = OptimizerConfig(
+        name=name, learning_rate=0.02 if name == "muon" else 3e-3,
+        matfn_method=method or "prism",
+        prism=PrismConfig(degree=2, iterations=3, warm_alpha_iters=1,
+                          sketch_dim=8))
+    losses = _train("gpt2-paper", ocfg, steps=12)
+    assert all(np.isfinite(losses))
+    assert losses[-1] < losses[0] - 0.05, losses
+
+
+@pytest.mark.parametrize("method", ["prism", "eigh"])
+def test_shampoo_reduces_loss(method):
+    ocfg = OptimizerConfig(
+        name="shampoo", learning_rate=1e-3, matfn_method=method,
+        precondition_every=2, max_precond_dim=512,
+        prism=PrismConfig(degree=2, iterations=10, sketch_dim=8))
+    losses = _train("gpt2-paper", ocfg, steps=12)
+    assert all(np.isfinite(losses))
+    assert losses[-1] < losses[0] - 0.05, losses
+
+
+def test_muon_on_moe_arch():
+    ocfg = OptimizerConfig(name="muon", learning_rate=0.02,
+                           prism=PrismConfig(degree=2, iterations=3,
+                                             warm_alpha_iters=3))
+    losses = _train("granite-moe-1b-a400m", ocfg, steps=8)
+    assert all(np.isfinite(losses)) and losses[-1] < losses[0]
+
+
+def test_muon_on_ssm_arch():
+    """PRISM/Muon applies to the attention-free arch too (optimizer-level)."""
+    ocfg = OptimizerConfig(name="muon", learning_rate=0.02,
+                           prism=PrismConfig(degree=2, iterations=3,
+                                             warm_alpha_iters=3))
+    losses = _train("falcon-mamba-7b", ocfg, steps=8)
+    assert all(np.isfinite(losses)) and losses[-1] < losses[0]
+
+
+# ---------------------------------------------------------------- plumbing
+
+def test_matrix_view_roundtrip(key):
+    p = jax.random.normal(key, (3, 8, 4, 16))  # [L, d, h, hd]
+    axes = ("layers", "embed", "heads", "head_dim")
+    M, meta = base.to_matrix_view(p, axes)
+    assert M.shape == (3, 8, 64)
+    back = base.from_matrix_view(M, meta)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(p))
+
+
+def test_matrix_view_embed_last(key):
+    p = jax.random.normal(key, (3, 4, 16, 8))  # wo: [L, h, hd, d]
+    axes = ("layers", "heads", "head_dim", "embed")
+    M, meta = base.to_matrix_view(p, axes)
+    assert M.shape == (3, 8, 64)  # embed rows
+    back = base.from_matrix_view(M, meta)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(p))
+
+
+def test_is_matrix_param():
+    assert base.is_matrix_param(("embed", "mlp"), (64, 128))
+    assert not base.is_matrix_param(("vocab", "embed"), (1000, 64))
+    assert not base.is_matrix_param(("embed",), (64,))
+    assert not base.is_matrix_param((None, "mlp"), (4, 128))  # conv kernel
+    assert base.is_matrix_param(("experts", "embed", "expert_mlp"),
+                                (8, 64, 32))
+
+
+def test_muon_orthogonalizes_update(key):
+    """The muon update direction must be (approximately) orthogonal."""
+    from repro.core import matfn
+
+    ocfg = OptimizerConfig(name="muon", learning_rate=0.1,
+                           prism=PrismConfig(degree=2, iterations=8))
+    params = {"w": jax.random.normal(key, (64, 32))}
+    axes = {"w": ("embed", "mlp")}
+    opt = make_optimizer(ocfg, axes)
+    state = opt.init(params)
+    grads = {"w": jax.random.normal(jax.random.fold_in(key, 1), (64, 32))}
+    new_p, _ = opt.update(grads, state, params, 0, key)
+    upd = (np.asarray(params["w"], np.float32)
+           * (1 - 0.1 * ocfg.weight_decay)
+           - np.asarray(new_p["w"], np.float32)) / 0.1
+    scale = np.sqrt(max(1.0, 64 / 32))
+    utu = upd.T @ upd / scale ** 2
+    np.testing.assert_allclose(utu, np.eye(32), atol=5e-2)
+
+
+# ---------------------------------------------------------------- compression
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 4000), st.floats(0.01, 100.0))
+def test_int8_roundtrip_error_bound(n, scale):
+    x = jnp.asarray(np.random.RandomState(n).randn(n) * scale,
+                    jnp.float32)
+    y = compression.int8_roundtrip_leaf(x)
+    blk_max = float(jnp.max(jnp.abs(x)))
+    # blockwise quantization error <= half step of the worst block
+    assert float(jnp.max(jnp.abs(y - x))) <= blk_max / 127.0 + 1e-6
+
+
+def test_int8_roundtrip_tree():
+    tree = {"a": jnp.ones((10, 10)), "b": {"c": jnp.zeros((3,))}}
+    out = compression.int8_roundtrip(tree)
+    np.testing.assert_allclose(out["a"], tree["a"], atol=1e-2)
+    np.testing.assert_allclose(out["b"]["c"], 0.0)

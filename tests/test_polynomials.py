@@ -1,0 +1,129 @@
+"""Unit + property tests for the PRISM polynomial/trace machinery."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import polynomials as poly
+from repro.core import prism, sketch
+from repro.core import random_matrices as rm
+
+
+def _weights_to_dict(row):
+    return {i: v for i, v in enumerate(row) if abs(v) > 1e-12}
+
+
+def test_taylor_inv_sqrt():
+    # (1-x)^{-1/2} = 1 + x/2 + 3x^2/8 + 5x^3/16 + 35x^4/128 + ...
+    c = poly.taylor_inv_sqrt(4)
+    np.testing.assert_allclose(c, [1, 0.5, 0.375, 0.3125, 0.2734375])
+
+
+def test_paper_d1_trace_formulas():
+    """Generic machinery reproduces the paper's hand-derived d=1 c1..c4."""
+    W = poly.trace_weight_matrix(poly.newton_schulz_residual(1))
+    expect = {
+        1: {3: 4.0, 2: -4.0},
+        2: {4: 6.0, 3: -10.0, 2: 4.0},
+        3: {5: 4.0, 4: -8.0, 3: 4.0},
+        4: {6: 1.0, 5: -2.0, 4: 1.0},
+    }
+    for k, want in expect.items():
+        assert _weights_to_dict(W[k]) == pytest.approx(want)
+
+
+def test_paper_d2_trace_formulas():
+    W = poly.trace_weight_matrix(poly.newton_schulz_residual(2))
+    expect = {
+        1: {7: 0.5, 6: 2.0, 5: 0.5, 4: -3.0},
+        2: {8: 1.5, 7: 3.0, 6: -4.5, 5: -4.0, 4: 4.0},
+        3: {9: 2.0, 7: -6.0, 6: 4.0},
+        4: {10: 1.0, 9: -2.0, 8: 1.0},
+    }
+    for k, want in expect.items():
+        assert _weights_to_dict(W[k]) == pytest.approx(want)
+
+
+def test_paper_inverse_newton_p2_formulas():
+    """App. A.3, p=2 coefficients (same as NS d=1 per the paper)."""
+    W = poly.trace_weight_matrix(poly.inverse_newton_residual(2))
+    expect = {
+        1: {3: 4.0, 2: -4.0},
+        2: {4: 6.0, 3: -10.0, 2: 4.0},
+        3: {5: 4.0, 4: -8.0, 3: 4.0},
+        4: {6: 1.0, 5: -2.0, 4: 1.0},
+    }
+    for k, want in expect.items():
+        assert _weights_to_dict(W[k]) == pytest.approx(want)
+
+
+def test_paper_chebyshev_formulas():
+    """App. A.4: c1 = -2 t4 + 2 t5, c2 = t4 - 2 t5 + t6."""
+    W = poly.trace_weight_matrix(poly.chebyshev_residual())
+    assert _weights_to_dict(W[1]) == pytest.approx({4: -2.0, 5: 2.0})
+    assert _weights_to_dict(W[2]) == pytest.approx({4: 1.0, 5: -2.0, 6: 1.0})
+
+
+def test_paper_inverse_newton_p1_formulas():
+    """App. A.3 p=1: c1 = 2 t3 - 2 t2, c2 = t4 - 2 t3 + t2."""
+    W = poly.trace_weight_matrix(poly.inverse_newton_residual(1))
+    assert _weights_to_dict(W[1]) == pytest.approx({3: 2.0, 2: -2.0})
+    assert _weights_to_dict(W[2]) == pytest.approx({4: 1.0, 3: -2.0, 2: 1.0})
+
+
+def test_residual_poly_eval_matches_definition():
+    ap = poly.newton_schulz_residual(2)
+    xs = jnp.linspace(-0.5, 1.0, 31)
+    for a in [0.375, 0.8, 1.45]:
+        g = 1 + xs / 2 + a * xs ** 2
+        want = 1 - (1 - xs) * g ** 2
+        np.testing.assert_allclose(ap.eval(xs, a), want, rtol=1e-5, atol=1e-6)
+
+
+def test_objective_matches_direct_frobenius(key):
+    """m(alpha) from the trace map == ||h(R; alpha)||_F^2 computed directly."""
+    R = rm.spd_with_eigs(key, 24, jnp.linspace(-0.4, 0.9, 24))
+    ap = poly.newton_schulz_residual(2)
+    for a in [0.4, 0.9, 1.4]:
+        m_trace = prism.objective_value(R, ap, a)
+        w, V = jnp.linalg.eigh(R)
+        hw = ap.eval(w, a)
+        hR = (V * hw[None, :]) @ V.T
+        direct = jnp.sum(hR ** 2)
+        np.testing.assert_allclose(m_trace, direct, rtol=2e-4)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.floats(-3, 3), min_size=5, max_size=5),
+       st.floats(-1, 1), st.floats(0.05, 2.0))
+def test_minimize_quartic_matches_grid(cs, lo, width):
+    hi = lo + width
+    coeffs = jnp.asarray(cs, jnp.float32)
+    a_closed = poly.minimize_quartic(coeffs, lo, hi)
+    a_grid = poly.minimize_poly_grid(coeffs, lo, hi, num=2001, newton_iters=0)
+    m_closed = poly._polyval_asc(coeffs, a_closed)
+    m_grid = poly._polyval_asc(coeffs, a_grid)
+    scale = 1.0 + float(jnp.abs(m_grid))
+    assert float(m_closed) <= float(m_grid) + 1e-3 * scale
+    tol = 1e-5 * (1 + abs(lo) + abs(hi))  # fp32 rounding of the bounds
+    assert lo - tol <= float(a_closed) <= hi + tol
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.floats(-2, 2), st.floats(-2, 2), st.floats(-2, 2), st.floats(-2, 2))
+def test_cubic_roots_are_roots(a, b, c, d):
+    roots = poly.cubic_roots(jnp.float32(a), jnp.float32(b), jnp.float32(c),
+                             jnp.float32(d))
+    # at least one returned candidate must (approximately) satisfy the cubic
+    vals = [abs(float(((a * r + b) * r + c) * r + d)) for r in roots]
+    scale = 1 + max(abs(a), abs(b), abs(c), abs(d))
+    if abs(a) > 1e-3:  # caller handles degenerate leading coefficient
+        assert min(vals) < 5e-2 * scale
+
+
+def test_minimize_quartic_batched():
+    coeffs = jnp.asarray([[0.0, -1.0, 1.0, 0.0, 0.0],
+                          [0.0, 1.0, 1.0, 0.0, 0.0]], jnp.float32)
+    a = poly.minimize_quartic(coeffs, 0.0, 2.0)
+    np.testing.assert_allclose(a, [0.5, 0.0], atol=1e-5)

@@ -1,0 +1,50 @@
+"""Scalar illustrations from the paper (Sec. 4 / Fig. 2), asserted."""
+import numpy as np
+
+from repro.core import polynomials as poly
+
+
+def test_fig2_scalar_acceleration():
+    """x0 = 1e-6: g_1(xi; 1) converges exponentially faster than f_1."""
+
+    def run(alpha, iters=40):
+        x = 1e-6
+        xs = []
+        for _ in range(iters):
+            xi = 1 - x * x
+            x = x * (1 + alpha * xi)
+            xs.append(1 - x * x)
+        return np.asarray(xs)
+
+    std = run(0.5)   # classical Newton-Schulz f_1
+    acc = run(1.0)   # g_1(xi; 1)
+    # residual 1 - x^2 decays ~(9/4)^{-k} vs ~4^{-k} near x=0 (paper Sec. 4)
+    k = 20
+    assert acc[k] < std[k]
+    # exponential gap: accelerated reaches 0.5 much earlier
+    it_std = int(np.argmax(std < 0.5))
+    it_acc = int(np.argmax(acc < 0.5))
+    assert it_acc < it_std * 0.75
+
+
+def test_sec4_linear_rate_constants():
+    """Near x=0: 1 - x_{k+1}^2 ~ 1 - 2.25 x_k^2 (std) vs 1 - 4 x_k^2 (acc)."""
+    x = 1e-4
+    std = 1 - (x * (1 + 0.5 * (1 - x * x))) ** 2
+    acc = 1 - (x * (1 + 1.0 * (1 - x * x))) ** 2
+    np.testing.assert_allclose(1 - std, 2.25 * x * x, rtol=1e-3)
+    np.testing.assert_allclose(1 - acc, 4.0 * x * x, rtol=1e-3)
+
+
+def test_lemma_b1_claim1_claim2():
+    """h(x, a) ranges from Lemma B.1 (claims 1-2), on a dense grid."""
+    h = lambda x, a: 1 - (1 - x) * (1 + a * x) ** 2
+    xs1 = np.linspace(0.5, 1.0, 201)
+    xs2 = np.linspace(-0.2, 0.5, 201)
+    als = np.linspace(0.5, 1.0, 101)
+    X1, A1 = np.meshgrid(xs1, als)
+    v1 = h(X1, A1)
+    assert v1.min() >= -0.2 - 1e-9 and np.all(v1 <= X1 ** 2 + 1e-9)
+    X2, A2 = np.meshgrid(xs2, als)
+    v2 = h(X2, A2)
+    assert v2.min() >= -0.2 - 1e-9 and v2.max() <= 0.25 + 1e-9
