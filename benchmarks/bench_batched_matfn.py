@@ -1,0 +1,136 @@
+"""Per-leaf loop vs shape-bucketed batched PRISM polar (DESIGN.md §7).
+
+The workload models Muon over a stack of B same-shape layer weight
+matrices (the transformer hot path): the per-leaf engine calls
+``matfn.polar`` once per matrix inside one jit (B unrolled chains), the
+bucketed engine stacks the leaves and runs ONE batched chain.
+
+Reported per (n, B) cell:
+  * wall clock per optimizer-step-equivalent call (ref-mode jnp GEMMs —
+    the honest CPU number; on TPU the same dispatch structure holds),
+  * compile time of the first call (B unrolled chains vs one),
+  * Pallas launches per step for the kernel path (counted by tracing with
+    REPRO_KERNEL_MODE=interpret): per-leaf scales as B * (2 + d),
+    bucketed stays constant at 2 + d (gram + fused chain + d Horner GEMMs).
+
+Writes the committed baseline BENCH_batched_matfn.json so later PRs have
+a perf trajectory.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.config import OptimizerConfig, PrismConfig
+from repro.core import matfn
+from repro.optim import bucketing
+
+SIZES = [256, 1024]
+BATCHES = [1, 8, 32]
+OUT = os.path.join(os.path.dirname(os.path.dirname(__file__)),
+                   "BENCH_batched_matfn.json")
+
+
+def _prism_cfg(n: int, use_kernels: bool = False) -> PrismConfig:
+    return PrismConfig(degree=2, iterations=3 if n <= 256 else 2,
+                       warm_alpha_iters=1, sketch_dim=8,
+                       use_kernels=use_kernels)
+
+
+def _engines(n: int, use_kernels: bool = False):
+    cfg = _prism_cfg(n, use_kernels)
+
+    def per_leaf(views, key):
+        return [matfn.polar(v, method="prism", cfg=cfg,
+                            key=jax.random.fold_in(key, i))
+                for i, v in enumerate(views)]
+
+    def bucketed(views, key):
+        ocfg = OptimizerConfig(prism=cfg)
+        return bucketing.polar_bucketed(views, ocfg, key)
+
+    return per_leaf, bucketed
+
+
+def _count_launches(fn, views, key) -> int:
+    from repro.kernels import ops
+
+    return ops.count_launches(lambda vs: fn(vs, key), views)
+
+
+def run(write_json: bool = True):
+    key = jax.random.PRNGKey(0)
+    results = []
+    for n in SIZES:
+        for B in BATCHES:
+            views = [jax.random.normal(jax.random.fold_in(key, 100 + i),
+                                       (n, n)) for i in range(B)]
+            cell = {"n": n, "B": B,
+                    "iterations": _prism_cfg(n).iterations}
+            # --- launch counts (kernel dispatch structure, trace only)
+            prev = os.environ.get("REPRO_KERNEL_MODE")
+            os.environ["REPRO_KERNEL_MODE"] = "interpret"
+            try:
+                pl_k, bu_k = _engines(n, use_kernels=True)
+                cell["launches_per_leaf"] = _count_launches(pl_k, views, key)
+                cell["launches_bucketed"] = _count_launches(bu_k, views, key)
+            finally:
+                if prev is None:
+                    os.environ.pop("REPRO_KERNEL_MODE", None)
+                else:
+                    os.environ["REPRO_KERNEL_MODE"] = prev
+            # --- wall clock + compile (ref mode jnp)
+            per_leaf, bucketed = _engines(n)
+            for name, fn in [("per_leaf", per_leaf),
+                             ("bucketed", bucketed)]:
+                jfn = jax.jit(lambda vs, fn=fn: fn(vs, key))
+                t0 = time.perf_counter()
+                jax.block_until_ready(jfn(views))
+                cell[f"{name}_compile_s"] = round(
+                    time.perf_counter() - t0, 3)
+                # min over repeats: robust to scheduler noise on a small
+                # shared host (median still jitters at the 100ms scale)
+                reps = 7 if n <= 256 else 2
+                ts = []
+                for _ in range(reps):
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(jfn(views))
+                    ts.append(time.perf_counter() - t0)
+                cell[f"{name}_ms"] = round(1e3 * min(ts), 2)
+            cell["speedup"] = round(
+                cell["per_leaf_ms"] / max(cell["bucketed_ms"], 1e-9), 3)
+            results.append(cell)
+            emit(f"batched_matfn_n{n}_B{B}", 1e3 * cell["bucketed_ms"],
+                 per_leaf_ms=cell["per_leaf_ms"],
+                 bucketed_ms=cell["bucketed_ms"],
+                 speedup=cell["speedup"],
+                 launches_per_leaf=cell["launches_per_leaf"],
+                 launches_bucketed=cell["launches_bucketed"])
+    out = {"benchmark": "bucketed batched PRISM polar vs per-leaf loop",
+           "backend": jax.default_backend(),
+           "prism": {"degree": 2, "warm_alpha_iters": 1, "sketch_dim": 8},
+           "notes": [
+               "wall clock is the CPU ref-mode (pure-jnp) number; the "
+               "bucketed win is in the dispatch-bound regime (many small "
+               "leaves) and in compile time (one chain vs B).",
+               "large-n CPU cells are flop-bound and XLA-CPU schedules a "
+               "batched dot_general slightly worse than a loop of 2-D "
+               "GEMMs, so speedup < 1 there is a host artifact; on the "
+               "TPU kernel path the same cells collapse B*(2+d) Pallas "
+               "launches to 2+d (see launches_per_leaf/launches_bucketed).",
+           ],
+           "results": results}
+    if write_json:
+        with open(OUT, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"# wrote {OUT}", flush=True)
+    return out
+
+
+if __name__ == "__main__":
+    run()

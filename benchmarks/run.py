@@ -8,14 +8,16 @@ import time
 
 
 def main() -> None:
-    from benchmarks import (fig1_sigma_sweep, fig3_gaussian, fig4_htmp,
-                            fig5_shampoo, fig6_muon_lm, figd3_sqrt,
-                            figd5_newton, roofline_table)
+    from benchmarks import (bench_batched_matfn, fig1_sigma_sweep,
+                            fig3_gaussian, fig4_htmp, fig5_shampoo,
+                            fig6_muon_lm, figd3_sqrt, figd5_newton,
+                            roofline_table)
 
     print("name,us_per_call,derived")
     t0 = time.time()
     for mod in [fig1_sigma_sweep, fig3_gaussian, fig4_htmp, figd3_sqrt,
-                figd5_newton, fig5_shampoo, fig6_muon_lm, roofline_table]:
+                figd5_newton, fig5_shampoo, fig6_muon_lm, roofline_table,
+                bench_batched_matfn]:
         name = mod.__name__.split(".")[-1]
         print(f"# --- {name} ---", flush=True)
         try:

@@ -172,6 +172,15 @@ class OptimizerConfig:
     max_precond_dim: int = 2048
     shampoo_eps: float = 1e-6
     grad_clip_norm: float = 1.0
+    # shape-bucketed batched matrix-function engine (optim/bucketing.py):
+    # stack same-shape matrix leaves into one [B, m, n] call per bucket
+    # instead of a Python loop of per-leaf polar/sqrtm calls.  bucket_pad
+    # additionally merges near-miss shapes into a shared padded bucket
+    # (Muon/polar only; exact — see DESIGN.md §7) when the padded area
+    # overhead stays below bucket_pad_slack.
+    bucketed: bool = True
+    bucket_pad: bool = False
+    bucket_pad_slack: float = 0.25
     # distributed tricks
     gradient_compression: str = "none"  # none | int8
     # "bfloat16": differentiate wrt the bf16 compute params so the data-

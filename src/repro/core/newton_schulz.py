@@ -91,20 +91,16 @@ def _classical_alpha(d: int) -> float:
 
 
 def _resolve_alpha(k: int, R: jax.Array, cfg: PrismConfig, method: str,
-                   key: Optional[jax.Array]):
-    """Static-k alpha resolution: classical / warm / PRISM fit."""
-    lo, hi = cfg.bounds
+                   key: Optional[jax.Array],
+                   n_real: Optional[jax.Array] = None):
+    """Static-k alpha resolution: classical coefficient or the shared
+    warm/PRISM-fit implementation in prism.resolve_alpha."""
     if method == "newton_schulz":
         return jnp.full(R.shape[:-2], _classical_alpha(cfg.degree),
                         dtype=jnp.float32)
     assert method == "prism"
-    if k < cfg.warm_alpha_iters:
-        return jnp.full(R.shape[:-2], hi, dtype=jnp.float32)
-    apoly = poly.newton_schulz_residual(cfg.degree)
-    kk = prism.alpha_schedule_key(key, k) if key is not None else None
-    return prism.fit_alpha(R, apoly, lo, hi, key=kk,
-                           sketch_dim=cfg.sketch_dim,
-                           use_kernels=cfg.use_kernels)
+    return prism.resolve_alpha(k, R, poly.newton_schulz_residual(cfg.degree),
+                               cfg, key, n_real=n_real)
 
 
 # ---------------------------------------------------------------------------
@@ -114,10 +110,16 @@ def _resolve_alpha(k: int, R: jax.Array, cfg: PrismConfig, method: str,
 
 def polar(A: jax.Array, cfg: PrismConfig = PrismConfig(),
           method: str = "prism", iters: Optional[int] = None,
-          key: Optional[jax.Array] = None, return_info: bool = False):
+          key: Optional[jax.Array] = None, return_info: bool = False,
+          n_real: Optional[jax.Array] = None):
     """Polar factor U V^T of A [..., m, n] via (PRISM-)Newton-Schulz.
 
     method: "prism" | "newton_schulz" (classical Taylor alpha).
+    n_real: per-matrix real extent of the Gram dimension (= min(m, n) side)
+      when A is a zero-padded pad-to-bucket stack; makes the sketched alpha
+      fit exactly ignore the padding (see prism.fit_alpha).  Zero-padding
+      itself is exact for the iterations: pad rows/cols of X stay zero and
+      the real block evolves as if unpadded.
     """
     iters = cfg.iterations if iters is None else iters
     transpose = A.shape[-2] < A.shape[-1]
@@ -127,7 +129,7 @@ def polar(A: jax.Array, cfg: PrismConfig = PrismConfig(),
     alphas, fros = [], []
     for k in range(iters):
         R = _gram_residual(X, cfg.use_kernels)
-        a = _resolve_alpha(k, R, cfg, method, key)
+        a = _resolve_alpha(k, R, cfg, method, key, n_real=n_real)
         X = apply_g(X, R, a, cfg.degree, "right", cfg.use_kernels)
         if return_info:
             alphas.append(a)

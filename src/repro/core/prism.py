@@ -31,6 +31,7 @@ def fit_alpha(
     key: Optional[jax.Array] = None,
     sketch_dim: int = 8,
     use_kernels: bool = False,
+    n_real: Optional[jax.Array] = None,
 ) -> jax.Array:
     """alpha~_k = argmin_{alpha in [lo, hi]} || S h(R; alpha) ||_F^2.
 
@@ -40,15 +41,33 @@ def fit_alpha(
       lo, hi: the constraint interval [l, u].
       key: PRNG key for the sketch; None => exact (unsketched) traces.
       sketch_dim: p; 0 => exact traces regardless of key.
+      n_real: per-matrix count of REAL dimensions when R comes from a
+        zero-padded pad-to-bucket matrix (shape R.shape[:-2]); None => no
+        padding.  For zero-padded polar NS the residual is exactly
+        block-diagonal, R = diag(R_real, I_pad), so every power trace picks
+        up the SAME pad contribution c = sum_{j >= n_real} ||S[:, j]||^2
+        (identity block, i-independent).  Subtracting c from every t_i
+        recovers the traces of R_real exactly — the fitted alpha is
+        bit-identical to the unpadded fit with sketch S[:, :n_real]
+        (DESIGN.md §7).
 
     Returns alpha with shape R.shape[:-2].
     """
+    n = R.shape[-1]
     max_pow = poly.max_trace_power(apoly)
     if key is None or sketch_dim == 0:
         t = sk.exact_power_traces(R, max_pow)
+        if n_real is not None:
+            # exact traces: the I_pad block adds (n - n_real) to every tr(R^i)
+            pad_tr = (n - n_real).astype(jnp.float32)
+            t = t - pad_tr[..., None]
     else:
-        S = sk.gaussian_sketch(key, sketch_dim, R.shape[-1], dtype=R.dtype)
+        S = sk.gaussian_sketch(key, sketch_dim, n, dtype=R.dtype)
         t = sk.sketched_power_traces(R, S, max_pow, use_kernels=use_kernels)
+        if n_real is not None:
+            s2 = jnp.sum(jnp.square(S.astype(jnp.float32)), axis=0)  # [n]
+            pad_mask = jnp.arange(n) >= n_real[..., None]
+            t = t - jnp.sum(s2 * pad_mask, axis=-1)[..., None]
     W = jnp.asarray(poly.trace_weight_matrix(apoly), dtype=jnp.float32)
     coeffs = jnp.einsum("ki,...i->...k", W, t)
     return poly.minimize_alpha_poly(coeffs, lo, hi)
@@ -69,20 +88,26 @@ def alpha_schedule_key(key: jax.Array, k: jax.Array) -> jax.Array:
 
 
 def resolve_alpha(
-    k: jax.Array,
+    k: int,
     R: jax.Array,
     apoly: poly.AlphaPoly,
     cfg: PrismConfig,
     key: Optional[jax.Array],
+    n_real: Optional[jax.Array] = None,
 ) -> jax.Array:
     """alpha_k per the config: warm iterations pin alpha = u (paper Sec. C),
-    later iterations fit via the sketched objective."""
+    later iterations fit via the sketched objective.
+
+    ``k`` is a STATIC Python int (the Table-1 iterations unroll), so warm
+    iterations compile to a constant — no sketch, no fit, zero overhead.
+    The Newton-Schulz family (polar / sqrtm / signm) routes through here;
+    chebyshev and inverse_newton carry their own bounds and no warm
+    schedule, so they call fit_alpha directly.
+    """
     lo, hi = cfg.bounds
+    if k < cfg.warm_alpha_iters:
+        return jnp.full(R.shape[:-2], hi, dtype=jnp.float32)
     if key is not None:
         key = alpha_schedule_key(key, k)
-    fitted = fit_alpha(R, apoly, lo, hi, key=key, sketch_dim=cfg.sketch_dim,
-                       use_kernels=cfg.use_kernels)
-    if cfg.warm_alpha_iters <= 0:
-        return fitted
-    warm = jnp.full_like(fitted, hi)
-    return jnp.where(k < cfg.warm_alpha_iters, warm, fitted)
+    return fit_alpha(R, apoly, lo, hi, key=key, sketch_dim=cfg.sketch_dim,
+                     use_kernels=cfg.use_kernels, n_real=n_real)

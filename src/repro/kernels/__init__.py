@@ -2,9 +2,13 @@
 
   matmul_add    D = alpha A @ B + beta C   (fused Horner step)
   gram          R = alpha I + beta X^T X   (symmetric syrk, half MXU work)
-  sketch_traces t_i = tr(S R^i S^T)        (fused chain + trace epilogue)
+  sketch_traces t_i = tr(S R^i S^T)        (whole chain in ONE launch,
+                                            V resident in VMEM, fused
+                                            trace epilogues)
 
-ops.py — jit wrappers w/ batching + CPU fallback; ref.py — jnp oracles.
+All grids carry a leading batch dimension so a [B, m, n] parameter bucket
+is one launch (DESIGN.md §7).  ops.py — jit wrappers w/ leading-dim
+collapsing + CPU fallback; ref.py — jnp oracles.
 """
 from repro.kernels import ops, ref
 

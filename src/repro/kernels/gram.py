@@ -11,6 +11,9 @@ is a TPU-native beyond-paper optimization (DESIGN.md §3).
 The kernel emits the upper-block-triangle U (lower blocks zero);
 ``ops.gram`` mirrors it with one elementwise pass:
     R = U + transpose(strictly-upper-block part of U).
+
+Batching: the grid is (B, T, K/bk) so a whole [B, m, n] parameter bucket
+forms its residuals in ONE launch (DESIGN.md §7); 2-D inputs run as B = 1.
 """
 from __future__ import annotations
 
@@ -44,15 +47,15 @@ def _unrank_upper(t, nb: int):
 
 
 def _kernel(x1_ref, x2_ref, out_ref, acc_ref, *, alpha, beta, n_k, bn, nb):
-    k = pl.program_id(1)
-    t = pl.program_id(0)  # hoisted: program_id inside pl.when bodies does
+    k = pl.program_id(2)
+    t = pl.program_id(1)  # hoisted: program_id inside pl.when bodies does
     # not interpret on CPU (substitution happens at kernel top level only)
 
     @pl.when(k == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += jnp.dot(x1_ref[...].T, x2_ref[...],
+    acc_ref[...] += jnp.dot(x1_ref[0].T, x2_ref[0],
                             preferred_element_type=jnp.float32)
 
     @pl.when(k == n_k - 1)
@@ -65,7 +68,7 @@ def _kernel(x1_ref, x2_ref, out_ref, acc_ref, *, alpha, beta, n_k, bn, nb):
             col = jax.lax.broadcasted_iota(jnp.int32, (bn, bn), 1)
             eye = jnp.where((row == col) & (i == j), alpha, 0.0)
             out = out + eye
-        out_ref[...] = out.astype(out_ref.dtype)
+        out_ref[0] = out.astype(out_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("alpha", "beta", "bn", "bk",
@@ -73,45 +76,50 @@ def _kernel(x1_ref, x2_ref, out_ref, acc_ref, *, alpha, beta, n_k, bn, nb):
 def gram_upper(X: jax.Array, *, alpha: float = 1.0, beta: float = -1.0,
                bn: int = 256, bk: int = 256,
                interpret: bool = False) -> jax.Array:
-    """Upper-block-triangle of alpha * I + beta * X^T X for X [m, n].
+    """Upper-block-triangle of alpha * I + beta * X^T X for X [m, n] or
+    [B, m, n].
 
     Only tiles (i, j) with i <= j are computed; strictly-lower blocks of
     the result are zero.  Use ``ops.gram`` for the full symmetric matrix.
     """
-    m, n = X.shape
+    squeeze = X.ndim == 2
+    if squeeze:
+        X = X[None]
+    nbatch, m, n = X.shape
     bn, bk = min(bn, n), min(bk, m)
     np_, kp = (-n) % bn, (-m) % bk
-    Xp = jnp.pad(X, ((0, kp), (0, np_)))
-    M, N = Xp.shape
+    Xp = jnp.pad(X, ((0, 0), (0, kp), (0, np_)))
+    M, N = Xp.shape[1], Xp.shape[2]
     nb, n_k = N // bn, M // bk
     T = nb * (nb + 1) // 2
 
-    def in_map_a(t, kk):
+    def in_map_a(b, t, kk):
         i, _ = _unrank_upper(t, nb)
-        return (kk, i)
+        return (b, kk, i)
 
-    def in_map_b(t, kk):
+    def in_map_b(b, t, kk):
         _, j = _unrank_upper(t, nb)
-        return (kk, j)
+        return (b, kk, j)
 
-    def out_map(t, kk):
+    def out_map(b, t, kk):
         i, j = _unrank_upper(t, nb)
-        return (i, j)
+        return (b, i, j)
 
     out = pl.pallas_call(
         functools.partial(_kernel, alpha=alpha, beta=beta, n_k=n_k, bn=bn,
                           nb=nb),
-        grid=(T, n_k),
+        grid=(nbatch, T, n_k),
         in_specs=[
-            pl.BlockSpec((bk, bn), in_map_a),
-            pl.BlockSpec((bk, bn), in_map_b),
+            pl.BlockSpec((1, bk, bn), in_map_a),
+            pl.BlockSpec((1, bk, bn), in_map_b),
         ],
-        out_specs=pl.BlockSpec((bn, bn), out_map),
-        out_shape=jax.ShapeDtypeStruct((N, N), X.dtype),
+        out_specs=pl.BlockSpec((1, bn, bn), out_map),
+        out_shape=jax.ShapeDtypeStruct((nbatch, N, N), X.dtype),
         scratch_shapes=[pltpu.VMEM((bn, bn), jnp.float32)],
         interpret=interpret,
     )(Xp, Xp)
-    return out[:n, :n]
+    out = out[:, :n, :n]
+    return out[0] if squeeze else out
 
 
 def mirror_upper(U: jax.Array, bn: int) -> jax.Array:

@@ -10,6 +10,11 @@ Tiling: (bm x bk) @ (bk x bn) MXU tiles with an fp32 VMEM scratch
 accumulator; K is the innermost grid dimension, the C-epilogue and the
 output cast happen on the last K step.  Tile sizes are 128-aligned for the
 128x128 MXU systolic array.
+
+Batching: the grid carries a leading batch dimension (B, M/bm, N/bn, K/bk)
+so a whole [B, m, n] parameter bucket runs in ONE kernel launch instead of
+a vmap of B independent 2-D launches (DESIGN.md §7).  2-D operands are
+promoted to B = 1.
 """
 from __future__ import annotations
 
@@ -22,21 +27,21 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(a_ref, b_ref, c_ref, d_ref, acc_ref, *, alpha, beta, n_k):
-    k = pl.program_id(2)
+    k = pl.program_id(3)
 
     @pl.when(k == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+    acc_ref[...] += jnp.dot(a_ref[0], b_ref[0],
                             preferred_element_type=jnp.float32)
 
     @pl.when(k == n_k - 1)
     def _epilogue():
         out = alpha * acc_ref[...]
         if beta != 0.0:
-            out = out + beta * c_ref[...].astype(jnp.float32)
-        d_ref[...] = out.astype(d_ref.dtype)
+            out = out + beta * c_ref[0].astype(jnp.float32)
+        d_ref[0] = out.astype(d_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("alpha", "beta", "bm", "bn",
@@ -45,32 +50,42 @@ def matmul_add(A: jax.Array, B: jax.Array, C: jax.Array | None = None,
                *, alpha: float = 1.0, beta: float = 0.0,
                bm: int = 256, bn: int = 256, bk: int = 256,
                interpret: bool = False) -> jax.Array:
-    """D = alpha * A @ B + beta * C for 2-D operands (batching in ops.py)."""
-    m, k = A.shape
-    k2, n = B.shape
+    """D = alpha * A @ B + beta * C for [m, k] or [B, m, k] operands.
+
+    All operands must share the same (possibly absent) batch dimension;
+    leading-dim collapsing and broadcasting live in ``ops.py``.
+    """
+    squeeze = A.ndim == 2
+    if squeeze:
+        A = A[None]
+        B = B[None]
+        C = None if C is None else C[None]
+    nb, m, k = A.shape
+    _, k2, n = B.shape
     assert k == k2, (A.shape, B.shape)
     if C is None:
-        C = jnp.zeros((m, n), dtype=A.dtype)
+        C = jnp.zeros((nb, m, n), dtype=A.dtype)
         beta = 0.0
     bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
     # zero-pad to tile multiples (mathematically exact for GEMM+epilogue)
     mp, np_, kp = (-m) % bm, (-n) % bn, (-k) % bk
-    Ap = jnp.pad(A, ((0, mp), (0, kp)))
-    Bp = jnp.pad(B, ((0, kp), (0, np_)))
-    Cp = jnp.pad(C, ((0, mp), (0, np_)))
-    M, N, K = Ap.shape[0], Bp.shape[1], Ap.shape[1]
+    Ap = jnp.pad(A, ((0, 0), (0, mp), (0, kp)))
+    Bp = jnp.pad(B, ((0, 0), (0, kp), (0, np_)))
+    Cp = jnp.pad(C, ((0, 0), (0, mp), (0, np_)))
+    M, N, K = Ap.shape[1], Bp.shape[2], Ap.shape[2]
     n_k = K // bk
     out = pl.pallas_call(
         functools.partial(_kernel, alpha=alpha, beta=beta, n_k=n_k),
-        grid=(M // bm, N // bn, n_k),
+        grid=(nb, M // bm, N // bn, n_k),
         in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((1, bm, bk), lambda b, i, j, kk: (b, i, kk)),
+            pl.BlockSpec((1, bk, bn), lambda b, i, j, kk: (b, kk, j)),
+            pl.BlockSpec((1, bm, bn), lambda b, i, j, kk: (b, i, j)),
         ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((M, N), A.dtype),
+        out_specs=pl.BlockSpec((1, bm, bn), lambda b, i, j, kk: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((nb, M, N), A.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(Ap, Bp, Cp)
-    return out[:m, :n]
+    out = out[:, :m, :n]
+    return out[0] if squeeze else out

@@ -7,12 +7,12 @@ Dispatch policy:
     or the shapes are large — the pure-jnp oracle in ref.py is used so CPU
     benchmarks aren't dominated by the interpreter.
 
-All wrappers accept leading batch dimensions and map the 2-D kernels over
-them (stacked scanned-layer parameter stacks use this path).
+All wrappers accept leading batch dimensions, which are collapsed into the
+single batch-grid dimension of the kernels (DESIGN.md §7): a whole
+[B, m, n] parameter bucket is one launch, never a vmap of B 2-D launches.
 """
 from __future__ import annotations
 
-import functools
 import os
 
 import jax
@@ -33,20 +33,20 @@ def _mode() -> str:
     return "native" if jax.default_backend() == "tpu" else "ref"
 
 
-def _batched(fn, *arrays, n_batch_args=None):
-    """vmap fn over any shared leading batch dims of the first arrays."""
-    lead = arrays[0].shape[:-2]
-    if not lead:
-        return fn(*arrays)
+def _collapse(lead, *arrays):
+    """Reshape shared leading batch dims of each array into one [B, ., .]."""
     size = 1
     for d in lead:
         size *= d
-    flat = [a.reshape((size,) + a.shape[len(lead):]) if a.ndim > 2 else a
-            for a in arrays]
-    mapped = jax.vmap(fn, in_axes=tuple(0 if a.ndim > 2 else None
-                                        for a in arrays))
-    out = mapped(*[f for f in flat])
-    return jax.tree.map(lambda o: o.reshape(lead + o.shape[1:]), out)
+    out = []
+    for a in arrays:
+        if a is None:
+            out.append(None)
+        elif a.ndim > 2:
+            out.append(a.reshape((size,) + a.shape[a.ndim - 2:]))
+        else:  # unbatched operand broadcast against the batch
+            out.append(jnp.broadcast_to(a, (size,) + a.shape))
+    return out
 
 
 def matmul_add(A, B, C=None, *, alpha: float = 1.0, beta: float = 0.0,
@@ -56,12 +56,14 @@ def matmul_add(A, B, C=None, *, alpha: float = 1.0, beta: float = 0.0,
     if mode == "ref":
         return _ref.matmul_add(A, B, C, alpha=alpha, beta=beta)
     interp = mode == "interpret"
-    fn = functools.partial(_mma.matmul_add, alpha=alpha, beta=beta,
-                           bm=bm, bn=bn, bk=bk, interpret=interp)
-    args = (A, B) if C is None else (A, B, C)
-    if C is None:
-        return _batched(lambda a, b: fn(a, b), A, B)
-    return _batched(lambda a, b, c: fn(a, b, C=c), A, B, C)
+    lead = A.shape[:-2]
+    if not lead:
+        return _mma.matmul_add(A, B, C, alpha=alpha, beta=beta,
+                               bm=bm, bn=bn, bk=bk, interpret=interp)
+    Ab, Bb, Cb = _collapse(lead, A, B, C)
+    out = _mma.matmul_add(Ab, Bb, Cb, alpha=alpha, beta=beta,
+                          bm=bm, bn=bn, bk=bk, interpret=interp)
+    return out.reshape(lead + out.shape[1:])
 
 
 def gram(X, *, alpha: float = 1.0, beta: float = -1.0,
@@ -72,34 +74,64 @@ def gram(X, *, alpha: float = 1.0, beta: float = -1.0,
         return _ref.gram(X, alpha=alpha, beta=beta)
     interp = mode == "interpret"
     bn_eff = min(bn, X.shape[-1])
+    lead = X.shape[:-2]
+    (Xb,) = _collapse(lead, X) if lead else (X,)
+    U = _gram.gram_upper(Xb, alpha=alpha, beta=beta, bn=bn, bk=bk,
+                         interpret=interp)
+    # mirror: diagonal blocks carry alpha*I + full tile; strictly-upper
+    # blocks transpose into the lower triangle.
+    R = _gram.mirror_upper(U, bn_eff)
+    return R.reshape(lead + R.shape[-2:]) if lead else R
 
-    def one(x):
-        U = _gram.gram_upper(x, alpha=alpha, beta=beta, bn=bn, bk=bk,
-                             interpret=interp)
-        # mirror: diagonal blocks carry alpha*I + full tile; strictly-upper
-        # blocks transpose into the lower triangle.
-        return _gram.mirror_upper(U, bn_eff)
 
-    return _batched(one, X)
+def sketch_traces(R, S, max_power: int, *, bn: int = 256):
+    """t_i = tr(S R^i S^T), i = 0..max_power; one fused chain launch.
 
-
-def sketch_traces(R, S, max_power: int, *, bm: int = 256, bk: int = 256):
-    """t_i = tr(S R^i S^T), i = 0..max_power; fused chain kernel."""
+    ``bn`` tiles both the rows and the contraction dim of the chain (they
+    must coincide: V's row partition is reused as the contraction
+    partition of the next power inside the single launch).
+    """
     mode = _mode()
     if mode == "ref":
         return _ref.sketch_traces(R, S, max_power)
     interp = mode == "interpret"
     p = S.shape[0]
-    pad = (-p) % _LANE
+    St = jnp.pad(S.T.astype(R.dtype), ((0, 0), (0, (-p) % _LANE)))
+    lead = R.shape[:-2]
+    (Rb,) = _collapse(lead, R) if lead else (R[None],)
+    t0 = jnp.sum(St.astype(jnp.float32) * St.astype(jnp.float32))
+    ts = _sk.sketch_chain(Rb, St, max_power, bn=bn, interpret=interp)
+    t = jnp.concatenate(
+        [jnp.broadcast_to(t0, ts.shape[:-1] + (1,)), ts], axis=-1)
+    return t.reshape(lead + (max_power + 1,))
 
-    def one(r):
-        St = jnp.pad(S.T.astype(r.dtype), ((0, 0), (0, pad)))
-        V = St
-        t0 = jnp.sum(St.astype(jnp.float32) * St.astype(jnp.float32))
-        ts = [t0]
-        for _ in range(max_power):
-            V, t = _sk.sketch_step(r, V, St, bm=bm, bk=bk, interpret=interp)
-            ts.append(t)
-        return jnp.stack(ts).astype(jnp.float32)
 
-    return _batched(one, R)
+def count_launches(fn, *args) -> int:
+    """Pallas launches fn would issue at runtime, counted by tracing.
+
+    Wraps the kernel wrapper functions (each contains exactly one
+    pallas_call) and counts call sites during an abstract trace — the
+    inner-jit compilation cache dedupes *traces*, not runtime launches,
+    so counting wrappers is the accurate launch count.  Observability
+    helper for tests and benchmarks (the launch-count contract of
+    DESIGN.md §7).
+    """
+    targets = [(_gram, "gram_upper"), (_mma, "matmul_add"),
+               (_sk, "sketch_chain"), (_sk, "sketch_step")]
+    counter = {"n": 0}
+
+    def wrap(f):
+        def counting(*a, **k):
+            counter["n"] += 1
+            return f(*a, **k)
+        return counting
+
+    saved = [getattr(mod, name) for mod, name in targets]
+    for mod, name in targets:
+        setattr(mod, name, wrap(getattr(mod, name)))
+    try:
+        jax.make_jaxpr(fn)(*args)
+    finally:
+        for (mod, name), f in zip(targets, saved):
+            setattr(mod, name, f)
+    return counter["n"]

@@ -1,17 +1,26 @@
-"""Fused sketched-trace Pallas TPU kernel for PRISM's alpha fit.
+"""Fused sketched-trace Pallas TPU kernels for PRISM's alpha fit.
 
 One PRISM fit needs t_i = tr(S R^i S^T), i = 1..4d+2, via the chain
 V_i = R V_{i-1} (V_0 = S^T, S in R^{p x n}).  On GPU these are p-wide
 GEMMs + separate trace reductions; on TPU a p~8 matmul wastes the 128x128
-MXU, so ``ops.sketch_traces`` pads the sketch to 128 lanes and this kernel
-fuses each chain step with its trace epilogue:
+MXU, so ``ops.sketch_traces`` pads the sketch to 128 lanes and these
+kernels fuse each chain step with its trace epilogue:
 
     (V', t') = (R @ V,  sum(St * (R @ V)))
 
 saving one full HBM round-trip of V' per power (the trace is reduced from
-the fp32 accumulator while the tile is still in VMEM).  Grid is
-(row-tiles, k-tiles) with a VMEM fp32 accumulator and an SMEM scalar
-accumulator for the running trace.
+the fp32 accumulator while the tile is still in VMEM).
+
+Two entry points:
+
+  * ``sketch_step`` — one chain step, grid (row-tiles, k-tiles); the
+    original per-power kernel, kept as the building block contract.
+  * ``sketch_chain`` — the ENTIRE chain for a whole [B, n, n] residual
+    bucket in ONE launch, grid (B, powers, row-tiles, k-tiles).  V never
+    leaves VMEM between powers: two ping-pong scratch buffers hold
+    V_{i-1} / V_i, so the only HBM traffic is streaming R's tiles once
+    per power.  This collapses the ~(4d+2) * B launches per fitted
+    iteration of the per-step kernel into one (DESIGN.md §7).
 """
 from __future__ import annotations
 
@@ -83,3 +92,94 @@ def sketch_step(R: jax.Array, V: jax.Array, St: jax.Array,
         interpret=interpret,
     )(Rp, Vp, Stp)
     return vout[:n], t[0]
+
+
+# ---------------------------------------------------------------------------
+# Whole-chain kernel: one launch per (bucket, fit)
+# ---------------------------------------------------------------------------
+
+
+def _chain_kernel(r_ref, st_ref, t_ref, v0_ref, v1_ref, acc_ref,
+                  *, n_k, bn):
+    b = pl.program_id(0)
+    pw = pl.program_id(1)   # chain step: computes V_{pw+1} = R V_pw
+    i = pl.program_id(2)    # output row tile of V_{pw+1}
+    k = pl.program_id(3)    # contraction tile over rows of V_pw
+
+    @pl.when((i == 0) & (k == 0))
+    def _init_trace():
+        t_ref[b, pw] = jnp.float32(0.0)
+
+    @pl.when(k == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # V_pw rows [k*bn, (k+1)*bn): St for pw == 0, else the ping-pong buffer
+    # written by the previous power ((pw-1) % 2).  All three candidate loads
+    # are tiny (bn x p128) next to the R tile; the selects keep the kernel
+    # branch-free (unvisited buffers may hold garbage — select discards it).
+    ks = pl.multiple_of(k * bn, bn)
+    st_k = st_ref[pl.ds(ks, bn), :]
+    v_prev = jnp.where((pw % 2) == 1, v0_ref[pl.ds(ks, bn), :],
+                       v1_ref[pl.ds(ks, bn), :])
+    v_in = jnp.where(pw == 0, st_k, v_prev)
+    acc_ref[...] += jnp.dot(r_ref[0], v_in,
+                            preferred_element_type=jnp.float32)
+
+    last = k == n_k - 1
+    is_ = pl.multiple_of(i * bn, bn)
+
+    @pl.when(last)
+    def _trace_epilogue():
+        # fused trace: tr contribution of this row tile of V_{pw+1}
+        t_ref[b, pw] += jnp.sum(
+            st_ref[pl.ds(is_, bn), :].astype(jnp.float32) * acc_ref[...])
+
+    @pl.when(last & ((pw % 2) == 0))
+    def _write_v0():
+        v0_ref[pl.ds(is_, bn), :] = acc_ref[...].astype(v0_ref.dtype)
+
+    @pl.when(last & ((pw % 2) == 1))
+    def _write_v1():
+        v1_ref[pl.ds(is_, bn), :] = acc_ref[...].astype(v1_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("max_power", "bn", "interpret"))
+def sketch_chain(R: jax.Array, St: jax.Array, max_power: int,
+                 *, bn: int = 256, interpret: bool = False) -> jax.Array:
+    """t_i = tr(S R^i S^T) for i = 1..max_power, one launch for the batch.
+
+    R: [B, n, n] (or [n, n]); St: [n, p128] (sketch transposed, lane-padded,
+    shared across the batch).  Returns [B, max_power] fp32 traces (the
+    i = 0 trace is sketch-only and computed by the caller).
+    """
+    squeeze = R.ndim == 2
+    if squeeze:
+        R = R[None]
+    nb, n, _ = R.shape
+    p = St.shape[1]
+    bn = min(bn, n)
+    pad = (-n) % bn
+    Rp = jnp.pad(R, ((0, 0), (0, pad), (0, pad)))
+    Stp = jnp.pad(St, ((0, pad), (0, 0)))
+    N = n + pad
+    n_k = N // bn
+    t = pl.pallas_call(
+        functools.partial(_chain_kernel, n_k=n_k, bn=bn),
+        grid=(nb, max_power, n_k, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bn, bn), lambda b, pw, i, k: (b, i, k)),
+            # full St resident in VMEM: needed at row-tile k (chain input)
+            # and row-tile i (trace epilogue) in the same grid step
+            pl.BlockSpec((N, p), lambda b, pw, i, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.SMEM),
+        out_shape=jax.ShapeDtypeStruct((nb, max_power), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((N, p), R.dtype),   # V ping-pong buffer (even pw)
+            pltpu.VMEM((N, p), R.dtype),   # V ping-pong buffer (odd pw)
+            pltpu.VMEM((bn, p), jnp.float32),
+        ],
+        interpret=interpret,
+    )(Rp, Stp)
+    return t[0] if squeeze else t

@@ -1,0 +1,201 @@
+"""Shape-bucketed batched matrix-function engine (DESIGN.md §7).
+
+Muon/Shampoo call ``matfn.polar`` / inverse roots once per parameter
+matrix; a transformer with L distinct weight matrices therefore compiles L
+independent unrolled Newton-Schulz chains and launches every kernel L
+times per step.  This module collapses that dispatch layer:
+
+  1. ``plan_buckets`` partitions the matrix views of a param tree into
+     shape buckets — exact-shape groups, plus (optionally) near-miss
+     shapes merged into a shared padded bucket when the area overhead
+     stays under a slack bound;
+  2. ``gather_bucket`` stacks each bucket into ONE [B, m, n] array
+     (leading scanned-layer dims of a view flatten into B, near-miss
+     shapes zero-pad to the bucket shape);
+  3. one batched PRISM call runs per bucket — a single residual, a single
+     shared-sketch alpha fit broadcast over B, and (with use_kernels) a
+     constant number of batch-grid Pallas launches per iteration,
+     independent of B and of the sketch chain length;
+  4. ``scatter_bucket`` splits, un-pads and reshapes the results back.
+
+Zero-padding is exact for the Newton-Schulz polar iterations (pad
+rows/cols of X stay identically zero; the real block evolves as if
+unpadded), and the sketched alpha fit is made exactly pad-blind via the
+``n_real`` trace correction in ``prism.fit_alpha``.  Padding is NOT used
+for the SVD method (null-space rotations can leak into the real block) or
+for the coupled sqrtm family (the damped pad block perturbs the fit), so
+those paths bucket exact shapes only.
+
+The plan is pure Python over static shapes — it runs at trace time and
+costs nothing inside jit.
+"""
+from __future__ import annotations
+
+from typing import List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import OptimizerConfig
+from repro.core import matfn
+
+
+class Entry(NamedTuple):
+    """One matrix view's slot inside a bucket."""
+
+    index: int                  # position in the caller's list of views
+    lead: Tuple[int, ...]       # leading (stacked-layer) dims of the view
+    mshape: Tuple[int, int]     # real matrix shape (m, n)
+    offset: int                 # first slice in the bucket's batch dim
+
+    @property
+    def count(self) -> int:
+        c = 1
+        for d in self.lead:
+            c *= d
+        return c
+
+
+class Bucket(NamedTuple):
+    shape: Tuple[int, int]      # bucket (possibly padded-to) matrix shape
+    entries: Tuple[Entry, ...]
+    size: int                   # total stacked batch B
+
+    @property
+    def padded(self) -> bool:
+        return any(e.mshape != self.shape for e in self.entries)
+
+
+def plan_buckets(shapes: Sequence[Tuple[int, ...]], *, pad: bool = False,
+                 pad_slack: float = 0.25) -> Tuple[Bucket, ...]:
+    """Partition view shapes [..lead.., m, n] into shape buckets.
+
+    Exact (m, n) groups never mix orientations — (m, n) and (n, m) are
+    distinct buckets.  With ``pad``, a shape joins an existing larger
+    bucket target (M, N) when padding is needed ONLY on the target's
+    Gram side (the min side, where polar forms its residual: cols when
+    M >= N, else rows) and the padded area stays within
+    M*N <= (1 + pad_slack) * m*n; targets are seeded from the largest
+    shapes first so the merge is deterministic.  Gram-side-only padding
+    keeps the residual's pad block coordinate-aligned (exactly I), which
+    is what the n_real trace correction subtracts exactly; padding the
+    other side would instead inject non-aligned rank-deficiency modes
+    into the fit — analytically argmin-invariant (h(1; a) = 1) but only
+    fp-approximately so near convergence — so such merges are refused.
+    """
+    mshapes = [(int(s[-2]), int(s[-1])) for s in shapes]
+    distinct = sorted(set(mshapes), key=lambda s: (-s[0] * s[1], s))
+    target = {}
+    targets: List[Tuple[int, int]] = []
+    for m, n in distinct:
+        tgt = (m, n)
+        if pad:
+            for M, N in targets:
+                fits = (m == M and n <= N) if M >= N else \
+                    (n == N and m <= M)
+                if fits and M * N <= (1 + pad_slack) * m * n:
+                    tgt = (M, N)
+                    break
+        target[(m, n)] = tgt
+        if tgt == (m, n):
+            targets.append(tgt)
+    groups = {}
+    for i, s in enumerate(shapes):
+        groups.setdefault(target[mshapes[i]], []).append(i)
+    buckets = []
+    for tgt in sorted(groups):
+        entries, offset = [], 0
+        for i in groups[tgt]:
+            e = Entry(i, tuple(int(d) for d in shapes[i][:-2]),
+                      mshapes[i], offset)
+            entries.append(e)
+            offset += e.count
+        buckets.append(Bucket(tgt, tuple(entries), offset))
+    return tuple(buckets)
+
+
+def gather_bucket(bucket: Bucket, views: Sequence[jax.Array]) -> jax.Array:
+    """Stack a bucket's views into one [B, M, N] array (zero-padded)."""
+    M, N = bucket.shape
+    parts = []
+    for e in bucket.entries:
+        v = views[e.index].reshape((e.count,) + e.mshape)
+        pm, pn = M - e.mshape[0], N - e.mshape[1]
+        if pm or pn:
+            v = jnp.pad(v, ((0, 0), (0, pm), (0, pn)))
+        parts.append(v)
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+
+
+def scatter_bucket(bucket: Bucket, batch: jax.Array,
+                   outs: List[Optional[jax.Array]]) -> None:
+    """Split [B, M, N] results back into per-view arrays (in place)."""
+    for e in bucket.entries:
+        m, n = e.mshape
+        sl = batch[e.offset:e.offset + e.count, :m, :n]
+        outs[e.index] = sl.reshape(e.lead + e.mshape)
+
+
+def _gram_real_dims(bucket: Bucket) -> jax.Array:
+    """Per-slice real extent of the polar Gram dimension, shape [B].
+
+    ``newton_schulz.polar`` transposes when M < N, so the Gram residual
+    lives on the min side of the BUCKET shape; each slice's real extent on
+    that side feeds the n_real trace correction.
+    """
+    M, N = bucket.shape
+    side = 1 if M >= N else 0
+    reals = []
+    for e in bucket.entries:
+        reals.extend([e.mshape[side]] * e.count)
+    return jnp.asarray(reals, jnp.int32)
+
+
+def polar_bucketed(views: Sequence[jax.Array], cfg: OptimizerConfig,
+                   key: Optional[jax.Array]) -> List[jax.Array]:
+    """Polar factor of every matrix view via one batched call per bucket."""
+    method = cfg.matfn_method
+    pad = cfg.bucket_pad and method != "svd"
+    buckets = plan_buckets([v.shape for v in views], pad=pad,
+                           pad_slack=cfg.bucket_pad_slack)
+    outs: List[Optional[jax.Array]] = [None] * len(views)
+    for bi, b in enumerate(buckets):
+        stacked = gather_bucket(b, views)
+        if cfg.muon_local_reshard and all(e.lead for e in b.entries):
+            # layers -> model, rows -> data (see make_muon): the batched NS
+            # iterations then need only one [n, n] R-psum per step.  Like
+            # the per-leaf path (which resharded only M.ndim >= 3 views),
+            # this applies only to buckets built purely from scanned-layer
+            # stacks — plain 2-D leaves keep their layout, and a mixed
+            # bucket is not co-sharded unevenly over opt_layers.
+            from repro.sharding_ctx import shard_activation
+
+            stacked = shard_activation(stacked,
+                                       ("opt_layers", "opt_rows", None))
+        if method == "svd":
+            O = matfn.polar(stacked, method="svd")
+        else:
+            kk = (jax.random.fold_in(key, bi) if key is not None else None)
+            kw = {}
+            if b.padded and method == "prism":
+                kw["n_real"] = _gram_real_dims(b)
+            O = matfn.polar(stacked, method=method, cfg=cfg.prism, key=kk,
+                            **kw)
+        scatter_bucket(b, O, outs)
+    return outs  # type: ignore[return-value]
+
+
+def transform_bucketed(mats: Sequence[jax.Array], fn) -> List[jax.Array]:
+    """Apply ``fn(stacked, bucket, bucket_index)`` once per exact-shape
+    bucket and scatter the [B, n, n] results back.
+
+    The generic engine for matrix functions without a pad-exactness story
+    (Shampoo inverse roots): fn sees the stacked bucket plus its Bucket —
+    enough to gather companion arrays (cached inverses), fold a per-bucket
+    PRNG key, or wrap a lax.cond around a recompute schedule.
+    """
+    buckets = plan_buckets([m.shape for m in mats], pad=False)
+    outs: List[Optional[jax.Array]] = [None] * len(mats)
+    for bi, b in enumerate(buckets):
+        scatter_bucket(b, fn(gather_bucket(b, mats), b, bi), outs)
+    return outs  # type: ignore[return-value]

@@ -6,6 +6,12 @@ momentum (method selectable: prism | newton_schulz | polar_express | svd)
 biases, routers) falls back to AdamW with a scaled lr, as in standard Muon
 practice.
 
+Orthogonalization dispatch is shape-bucketed by default
+(optim/bucketing.py): same-shape momentum matrices stack into one
+[B, m, n] batched polar call per bucket, so the whole tree costs a
+constant number of compiled NS chains (and Pallas launches) instead of
+one per leaf.  ``cfg.bucketed=False`` restores the per-leaf loop.
+
 Under pjit the polar iteration's GEMMs run on *sharded* momentum matrices,
 so orthogonalization is distributed for free (DION-style), and the PRISM
 sketch fit adds only O(n^2 p / shards) work per fitted iteration.
@@ -19,7 +25,7 @@ import jax.numpy as jnp
 
 from repro.config import OptimizerConfig
 from repro.core import matfn
-from repro.optim import base
+from repro.optim import base, bucketing
 
 
 def _flatten_with_axes(params, axes_tree):
@@ -45,40 +51,48 @@ def make_muon(cfg: OptimizerConfig, axes_tree) -> base.Optimizer:
         return {"leaves": jax.tree.unflatten(treedef, state),
                 "count": jnp.zeros((), jnp.int32)}
 
+    def _polar_per_leaf(views, leaf_idx, key):
+        """Legacy per-leaf dispatch: one polar chain per matrix leaf."""
+        outs = []
+        for M, i in zip(views, leaf_idx):
+            if cfg.muon_local_reshard and M.ndim >= 3:
+                # layers -> model, rows -> data: the NS iterations then
+                # need only one [n, n] R-psum over 16 chips per step
+                # instead of cross-mesh GEMM collectives
+                from repro.sharding_ctx import shard_activation
+
+                M = shard_activation(
+                    M, ("opt_layers",) * (M.ndim - 2)
+                    + ("opt_rows", None))
+            kk = jax.random.fold_in(key, i) if key is not None else None
+            if cfg.matfn_method == "svd":
+                outs.append(matfn.polar(M, method="svd"))
+            else:
+                outs.append(matfn.polar(M, method=cfg.matfn_method,
+                                        cfg=cfg.prism, key=kk))
+        return outs
+
     def update(grads, state, params, step, key):
         flat_g, flat_a, treedef = _flatten_with_axes(grads, axes_tree)
         flat_p = jax.tree.leaves(params)
         flat_s = treedef.flatten_up_to(state["leaves"])
         lr = cfg.learning_rate
-        new_p, new_s = [], []
+        new_p = [None] * len(flat_g)
+        new_s = [None] * len(flat_g)
+        # pass 1: momentum everywhere; AdamW leaves finish immediately,
+        # matrix leaves only queue their nesterov momentum view
+        views, metas, leaf_idx = [], [], []
         for i, (g, a, p, s) in enumerate(zip(flat_g, flat_a, flat_p,
                                              flat_s)):
             g = g.astype(jnp.float32)
-            p32 = p.astype(jnp.float32)
             if base.is_matrix_param(a, p.shape):
                 mom = cfg.momentum * s["mom"] + g
                 gm = g + cfg.momentum * mom  # nesterov
                 M, meta = base.to_matrix_view(gm, a)
-                if cfg.muon_local_reshard and M.ndim >= 3:
-                    # layers -> model, rows -> data: the NS iterations then
-                    # need only one [n, n] R-psum over 16 chips per step
-                    # instead of cross-mesh GEMM collectives
-                    from repro.sharding_ctx import shard_activation
-
-                    M = shard_activation(
-                        M, ("opt_layers",) * (M.ndim - 2)
-                        + ("opt_rows", None))
-                kk = jax.random.fold_in(key, i) if key is not None else None
-                if cfg.matfn_method == "svd":
-                    O = matfn.polar(M, method="svd")
-                else:
-                    O = matfn.polar(M, method=cfg.matfn_method,
-                                    cfg=cfg.prism, key=kk)
-                m_, n_ = M.shape[-2], M.shape[-1]
-                scale = jnp.sqrt(jnp.maximum(1.0, m_ / n_))
-                upd = base.from_matrix_view(O * scale, meta)
-                p32 = p32 * (1.0 - lr * cfg.weight_decay) - lr * upd
-                new_s.append({"mom": mom})
+                views.append(M)
+                metas.append(meta)
+                leaf_idx.append(i)
+                new_s[i] = {"mom": mom}
             else:
                 # AdamW for non-matrix params
                 b1, b2 = cfg.beta1, cfg.beta2
@@ -88,10 +102,25 @@ def make_muon(cfg: OptimizerConfig, axes_tree) -> base.Optimizer:
                 mhat = mom / (1 - b1 ** t)
                 vhat = nu / (1 - b2 ** t)
                 alr = lr * cfg.adamw_lr_scale
-                p32 = p32 * (1.0 - alr * cfg.weight_decay) \
+                p32 = p.astype(jnp.float32) * (1.0 - alr * cfg.weight_decay) \
                     - alr * mhat / (jnp.sqrt(vhat) + cfg.eps)
-                new_s.append({"mom": mom, "nu": nu})
-            new_p.append(p32.astype(p.dtype))
+                new_s[i] = {"mom": mom, "nu": nu}
+                new_p[i] = p32.astype(p.dtype)
+        # orthogonalize: one batched call per shape bucket (the per-leaf
+        # Python loop survives only behind cfg.bucketed=False)
+        if cfg.bucketed:
+            polars = bucketing.polar_bucketed(views, cfg, key)
+        else:
+            polars = _polar_per_leaf(views, leaf_idx, key)
+        # pass 2: aspect-scale, un-view, apply
+        for O, meta, i in zip(polars, metas, leaf_idx):
+            p = flat_p[i]
+            m_, n_ = O.shape[-2], O.shape[-1]
+            scale = jnp.sqrt(jnp.maximum(1.0, m_ / n_))
+            upd = base.from_matrix_view(O * scale, meta)
+            p32 = p.astype(jnp.float32) * (1.0 - lr * cfg.weight_decay) \
+                - lr * upd
+            new_p[i] = p32.astype(p.dtype)
         return (jax.tree.unflatten(treedef, new_p),
                 {"leaves": jax.tree.unflatten(treedef, new_s),
                  "count": state["count"] + 1})

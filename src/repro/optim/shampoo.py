@@ -11,6 +11,11 @@ Dims above ``max_precond_dim`` fall back to a diagonal (AdaGrad)
 preconditioner on that side.  Preconditioned updates are norm-grafted to
 the raw gradient norm for stability; inverse roots are recomputed every
 ``precondition_every`` steps and cached in the state.
+
+Inverse-root dispatch is shape-bucketed by default (optim/bucketing.py):
+the L and R preconditioners of every matrix leaf — across leaves — stack
+into one [B, n, n] batched call per distinct n, under a single recompute
+cond per bucket.  ``cfg.bucketed=False`` restores the per-leaf loop.
 """
 from __future__ import annotations
 
@@ -19,7 +24,7 @@ import jax.numpy as jnp
 
 from repro.config import OptimizerConfig
 from repro.core import matfn
-from repro.optim import base
+from repro.optim import base, bucketing
 from repro.optim.muon import _flatten_with_axes
 
 
@@ -76,72 +81,110 @@ def make_shampoo(cfg: OptimizerConfig, axes_tree,
         return {"leaves": jax.tree.unflatten(treedef, state),
                 "count": jnp.zeros((), jnp.int32)}
 
+    def _inv_roots_bucketed(mats, prevs, recompute, key):
+        """All buckets under ONE recompute cond: the cache-hit branch
+        returns the per-leaf cached inverses untouched, so steps between
+        recomputes move zero preconditioner bytes (no gather/scatter)."""
+        def compute():
+            def one_bucket(stacked, b, bi):
+                kk = (jax.random.fold_in(key, bi)
+                      if key is not None else None)
+                return _inv_root(stacked, p_root, cfg, kk)
+
+            return bucketing.transform_bucketed(mats, one_bucket)
+
+        return jax.lax.cond(recompute, compute, lambda: list(prevs))
+
+    def _inv_roots_per_leaf(mats, prevs, recompute, keys):
+        outs = []
+        for A, prev, kk in zip(mats, prevs, keys):
+            outs.append(jax.lax.cond(
+                recompute,
+                lambda A=A, kk=kk: _inv_root(A, p_root, cfg, kk),
+                lambda prev=prev: prev))
+        return outs
+
     def update(grads, state, params, step, key):
         flat_g, flat_a, treedef = _flatten_with_axes(grads, axes_tree)
         flat_p = jax.tree.leaves(params)
         flat_s = treedef.flatten_up_to(state["leaves"])
         lr = cfg.learning_rate
         recompute = (state["count"] % cfg.precondition_every) == 0
-        new_p, new_s = [], []
+        beta2 = 0.999
+        new_p = [None] * len(flat_g)
+        new_s = [None] * len(flat_g)
+        # pass 1: EMA the Kronecker factors; queue the inverse-root jobs
+        matrix, jobs = [], []  # jobs: (leaf, "Linv"/"Rinv", A, prev, key_ix)
         for i, (g, a, pp, s) in enumerate(zip(flat_g, flat_a, flat_p,
                                               flat_s)):
             g = g.astype(jnp.float32)
-            p32 = pp.astype(jnp.float32)
-            if base.is_matrix_param(a, pp.shape):
-                G, meta = base.to_matrix_view(g, a)
-                ns = {"mom": None}
-                beta2 = 0.999
-                kk = jax.random.fold_in(key, i) if key is not None else None
-                if "L" in s:
-                    L = beta2 * s["L"] + jnp.einsum("...mk,...nk->...mn",
-                                                    G, G)
-                    Linv = jax.lax.cond(
-                        recompute,
-                        lambda: _inv_root(L, p_root, cfg, kk),
-                        lambda: s["Linv"])
-                    ns.update(L=L, Linv=Linv)
-                    PG = Linv @ G
-                else:
-                    dL = beta2 * s["diagL"] + jnp.sum(G * G, axis=-1)
-                    ns.update(diagL=dL)
-                    PG = G / (dL[..., None] ** (1.0 / (2 * p_root))
-                              + cfg.shampoo_eps)
-                if "R" in s:
-                    R = beta2 * s["R"] + jnp.einsum("...km,...kn->...mn",
-                                                    G, G)
-                    Rinv = jax.lax.cond(
-                        recompute,
-                        lambda: _inv_root(R, p_root, cfg,
-                                          jax.random.fold_in(kk, 1)
-                                          if kk is not None else None),
-                        lambda: s["Rinv"])
-                    ns.update(R=R, Rinv=Rinv)
-                    PG = PG @ Rinv
-                else:
-                    dR = beta2 * s["diagR"] + jnp.sum(G * G, axis=-2)
-                    ns.update(diagR=dR)
-                    PG = PG / (dR[..., None, :] ** (1.0 / (2 * p_root))
-                               + cfg.shampoo_eps)
-                # norm grafting to the raw gradient
-                gn = jnp.sqrt(jnp.sum(G * G, axis=(-2, -1), keepdims=True))
-                pn = jnp.sqrt(jnp.sum(PG * PG, axis=(-2, -1), keepdims=True))
-                PG = PG * gn / jnp.maximum(pn, 1e-12)
-                upd = base.from_matrix_view(PG, meta)
-                mom = cfg.momentum * s["mom"] + upd
-                ns["mom"] = mom
-                p32 = p32 * (1.0 - lr * cfg.weight_decay) - lr * mom
-                new_s.append(ns)
-            else:
+            if not base.is_matrix_param(a, pp.shape):
                 b1, b2 = cfg.beta1, cfg.beta2
                 mom = b1 * s["mom"] + (1 - b1) * g
                 nu = b2 * s["nu"] + (1 - b2) * jnp.square(g)
                 t = (state["count"] + 1).astype(jnp.float32)
-                alr = lr
-                p32 = p32 * (1.0 - alr * cfg.weight_decay) - alr * (
-                    mom / (1 - b1 ** t)) / (
+                p32 = pp.astype(jnp.float32) * (1.0 - lr * cfg.weight_decay) \
+                    - lr * (mom / (1 - b1 ** t)) / (
                         jnp.sqrt(nu / (1 - b2 ** t)) + cfg.eps)
-                new_s.append({"mom": mom, "nu": nu})
-            new_p.append(p32.astype(pp.dtype))
+                new_s[i] = {"mom": mom, "nu": nu}
+                new_p[i] = p32.astype(pp.dtype)
+                continue
+            G, meta = base.to_matrix_view(g, a)
+            ns = {"mom": None}
+            if "L" in s:
+                L = beta2 * s["L"] + jnp.einsum("...mk,...nk->...mn", G, G)
+                ns["L"] = L
+                jobs.append((i, "Linv", L, s["Linv"], 0))
+            else:
+                ns["diagL"] = beta2 * s["diagL"] + jnp.sum(G * G, axis=-1)
+            if "R" in s:
+                R = beta2 * s["R"] + jnp.einsum("...km,...kn->...mn", G, G)
+                ns["R"] = R
+                jobs.append((i, "Rinv", R, s["Rinv"], 1))
+            else:
+                ns["diagR"] = beta2 * s["diagR"] + jnp.sum(G * G, axis=-2)
+            matrix.append((i, G, meta))
+            new_s[i] = ns
+        # inverse roots: one batched call per shape bucket across ALL
+        # leaves' L and R factors (per-leaf loop behind cfg.bucketed=False)
+        mats = [A for (_, _, A, _, _) in jobs]
+        prevs = [prev for (_, _, _, prev, _) in jobs]
+        if cfg.bucketed:
+            invs = _inv_roots_bucketed(mats, prevs, recompute, key)
+        else:
+            keys = []
+            for (i, _, _, _, side) in jobs:
+                kk = jax.random.fold_in(key, i) if key is not None else None
+                if kk is not None and side:
+                    kk = jax.random.fold_in(kk, 1)
+                keys.append(kk)
+            invs = _inv_roots_per_leaf(mats, prevs, recompute, keys)
+        for (i, name, _, _, _), inv in zip(jobs, invs):
+            new_s[i][name] = inv
+        # pass 2: precondition, graft, momentum, apply
+        for i, G, meta in matrix:
+            s, ns = flat_s[i], new_s[i]
+            pp = flat_p[i]
+            if "Linv" in ns:
+                PG = ns["Linv"] @ G
+            else:
+                PG = G / (ns["diagL"][..., None] ** (1.0 / (2 * p_root))
+                          + cfg.shampoo_eps)
+            if "Rinv" in ns:
+                PG = PG @ ns["Rinv"]
+            else:
+                PG = PG / (ns["diagR"][..., None, :] ** (1.0 / (2 * p_root))
+                           + cfg.shampoo_eps)
+            # norm grafting to the raw gradient
+            gn = jnp.sqrt(jnp.sum(G * G, axis=(-2, -1), keepdims=True))
+            pn = jnp.sqrt(jnp.sum(PG * PG, axis=(-2, -1), keepdims=True))
+            PG = PG * gn / jnp.maximum(pn, 1e-12)
+            upd = base.from_matrix_view(PG, meta)
+            mom = cfg.momentum * s["mom"] + upd
+            ns["mom"] = mom
+            p32 = pp.astype(jnp.float32) * (1.0 - lr * cfg.weight_decay) \
+                - lr * mom
+            new_p[i] = p32.astype(pp.dtype)
         return (jax.tree.unflatten(treedef, new_p),
                 {"leaves": jax.tree.unflatten(treedef, new_s),
                  "count": state["count"] + 1})

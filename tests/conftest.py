@@ -11,3 +11,24 @@ import pytest  # noqa: E402
 @pytest.fixture
 def key():
     return jax.random.PRNGKey(0)
+
+
+def hypothesis_or_stub():
+    """(given, settings, st) — real hypothesis, or decoration-safe stubs
+    that skip ONLY the property tests when it isn't installed."""
+    try:
+        from hypothesis import given, settings, strategies as st
+        return given, settings, st
+    except ImportError:
+        def given(*a, **k):
+            return lambda f: pytest.mark.skip(
+                reason="hypothesis not installed")(f)
+
+        def settings(*a, **k):
+            return lambda f: f
+
+        class _St:
+            def __getattr__(self, name):
+                return lambda *a, **k: None
+
+        return given, settings, _St()

@@ -9,6 +9,8 @@ from repro.kernels import matmul_add as mma_kernel
 from repro.kernels import ref
 from repro.kernels import sketch_traces as sk_kernel
 
+pytestmark = pytest.mark.tier1
+
 SHAPES_MM = [
     (8, 8, 8),
     (128, 128, 128),
@@ -104,6 +106,58 @@ def test_sketch_traces_sweep(key, n, p, maxp):
         ts.append(float(t))
     want = np.asarray(ref.sketch_traces(R, S, maxp))
     np.testing.assert_allclose(np.asarray(ts), want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("B,m,k,n", [(3, 64, 64, 64), (2, 100, 70, 130),
+                                     (5, 33, 257, 129)])
+def test_matmul_add_batch_grid(key, B, m, k, n):
+    """The batch-grid kernel == a loop of 2-D oracle calls."""
+    ka, kb, kc = jax.random.split(key, 3)
+    A = jax.random.normal(ka, (B, m, k))
+    Bm = jax.random.normal(kb, (B, k, n))
+    C = jax.random.normal(kc, (B, m, n))
+    got = mma_kernel.matmul_add(A, Bm, C, alpha=0.7, beta=-1.3,
+                                bm=64, bn=64, bk=64, interpret=True)
+    want = np.stack([np.asarray(ref.matmul_add(A[b], Bm[b], C[b],
+                                               alpha=0.7, beta=-1.3))
+                     for b in range(B)])
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B,m,n", [(3, 96, 130), (2, 64, 64), (4, 200, 100)])
+def test_gram_batch_grid(key, B, m, n):
+    X = jax.random.normal(key, (B, m, n))
+    U = gram_kernel.gram_upper(X, alpha=1.0, beta=-1.0, bn=64, bk=64,
+                               interpret=True)
+    got = gram_kernel.mirror_upper(U, min(64, n))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.gram(X)),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B,n,p,maxp,bn", [(3, 64, 8, 10, 64),
+                                           (2, 130, 8, 5, 64),
+                                           (1, 96, 16, 7, 32)])
+def test_sketch_chain_single_launch(key, B, n, p, maxp, bn):
+    """The fused whole-chain kernel == the per-step oracle chain."""
+    kr, ks = jax.random.split(key)
+    R = jax.random.normal(kr, (B, n, n)) / np.sqrt(n)
+    R = 0.5 * (R + jnp.swapaxes(R, -1, -2))
+    S = jax.random.normal(ks, (p, n)) / np.sqrt(p)
+    St = jnp.pad(S.T, ((0, 0), (0, (-p) % 128)))
+    got = sk_kernel.sketch_chain(R, St, maxp, bn=bn, interpret=True)
+    want = np.asarray(ref.sketch_traces(R, S, maxp))[:, 1:]
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-4)
+
+
+def test_sketch_chain_bf16(key):
+    kr, ks = jax.random.split(key)
+    R = (jax.random.normal(kr, (2, 64, 64)) / 8).astype(jnp.bfloat16)
+    R = 0.5 * (R + jnp.swapaxes(R, -1, -2))
+    S = (jax.random.normal(ks, (8, 64)) / np.sqrt(8)).astype(jnp.bfloat16)
+    St = jnp.pad(S.T, ((0, 0), (0, 120)))
+    got = sk_kernel.sketch_chain(R, St, 6, bn=64, interpret=True)
+    want = np.asarray(ref.sketch_traces(R, S, 6))[:, 1:]
+    np.testing.assert_allclose(np.asarray(got), want, rtol=5e-2, atol=5e-2)
 
 
 def test_ops_dispatch_ref_on_cpu(key):

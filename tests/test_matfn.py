@@ -8,6 +8,8 @@ from repro.config import PrismConfig
 from repro.core import matfn
 from repro.core import random_matrices as rm
 
+pytestmark = pytest.mark.tier1
+
 CFG2 = PrismConfig(degree=2, sketch_dim=8)
 CFG1 = PrismConfig(degree=1, sketch_dim=8)
 

@@ -1,5 +1,8 @@
 """Scalar illustrations from the paper (Sec. 4 / Fig. 2), asserted."""
 import numpy as np
+import pytest
+
+pytestmark = pytest.mark.tier1
 
 from repro.core import polynomials as poly
 
