@@ -25,13 +25,17 @@ import time
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit
+from benchmarks.common import emit, pick, smoke
 from repro.config import OptimizerConfig, PrismConfig
 from repro.core import matfn
 from repro.optim import bucketing
 
 SIZES = [256, 1024]
 BATCHES = [1, 8, 32]
+# smoke sweeps are SUBSETS of the full grids, so every smoke CSV row has
+# a same-named full-run/baseline counterpart
+SMOKE_SIZES = [256]
+SMOKE_BATCHES = [1, 8]
 OUT = os.path.join(os.path.dirname(os.path.dirname(__file__)),
                    "BENCH_batched_matfn.json")
 
@@ -66,24 +70,34 @@ def _count_launches(fn, views, key) -> int:
 def run(write_json: bool = True):
     key = jax.random.PRNGKey(0)
     results = []
-    for n in SIZES:
-        for B in BATCHES:
+    # CI smoke runs pinned to REPRO_KERNEL_MODE=ref: skip the interpret-
+    # mode launch-count pass there so the benchmark never touches the
+    # Pallas interpreter on runners where its Python cost dominates (the
+    # count is a dispatch-structure invariant, asserted by
+    # tests/test_bucketing.py on every CI run anyway)
+    count_launches = os.environ.get("REPRO_KERNEL_MODE") != "ref"
+    write_json = write_json and not smoke()
+    for n in pick(SIZES, SMOKE_SIZES):
+        for B in pick(BATCHES, SMOKE_BATCHES):
             views = [jax.random.normal(jax.random.fold_in(key, 100 + i),
                                        (n, n)) for i in range(B)]
             cell = {"n": n, "B": B,
                     "iterations": _prism_cfg(n).iterations}
             # --- launch counts (kernel dispatch structure, trace only)
-            prev = os.environ.get("REPRO_KERNEL_MODE")
-            os.environ["REPRO_KERNEL_MODE"] = "interpret"
-            try:
-                pl_k, bu_k = _engines(n, use_kernels=True)
-                cell["launches_per_leaf"] = _count_launches(pl_k, views, key)
-                cell["launches_bucketed"] = _count_launches(bu_k, views, key)
-            finally:
-                if prev is None:
-                    os.environ.pop("REPRO_KERNEL_MODE", None)
-                else:
-                    os.environ["REPRO_KERNEL_MODE"] = prev
+            if count_launches:
+                prev = os.environ.get("REPRO_KERNEL_MODE")
+                os.environ["REPRO_KERNEL_MODE"] = "interpret"
+                try:
+                    pl_k, bu_k = _engines(n, use_kernels=True)
+                    cell["launches_per_leaf"] = _count_launches(pl_k, views,
+                                                                key)
+                    cell["launches_bucketed"] = _count_launches(bu_k, views,
+                                                                key)
+                finally:
+                    if prev is None:
+                        os.environ.pop("REPRO_KERNEL_MODE", None)
+                    else:
+                        os.environ["REPRO_KERNEL_MODE"] = prev
             # --- wall clock + compile (ref mode jnp)
             per_leaf, bucketed = _engines(n)
             for name, fn in [("per_leaf", per_leaf),
@@ -105,12 +119,13 @@ def run(write_json: bool = True):
             cell["speedup"] = round(
                 cell["per_leaf_ms"] / max(cell["bucketed_ms"], 1e-9), 3)
             results.append(cell)
+            extra = ({"launches_per_leaf": cell["launches_per_leaf"],
+                      "launches_bucketed": cell["launches_bucketed"]}
+                     if count_launches else {})
             emit(f"batched_matfn_n{n}_B{B}", 1e3 * cell["bucketed_ms"],
                  per_leaf_ms=cell["per_leaf_ms"],
                  bucketed_ms=cell["bucketed_ms"],
-                 speedup=cell["speedup"],
-                 launches_per_leaf=cell["launches_per_leaf"],
-                 launches_bucketed=cell["launches_bucketed"])
+                 speedup=cell["speedup"], **extra)
     out = {"benchmark": "bucketed batched PRISM polar vs per-leaf loop",
            "backend": jax.default_backend(),
            "prism": {"degree": 2, "warm_alpha_iters": 1, "sketch_dim": 8},

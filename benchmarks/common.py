@@ -9,6 +9,7 @@ This container is CPU-only, so each benchmark reports BOTH:
 """
 from __future__ import annotations
 
+import os
 import time
 from typing import Callable, Dict
 
@@ -16,6 +17,20 @@ import jax
 import numpy as np
 
 RESULTS = []
+
+
+def smoke() -> bool:
+    """True under ``benchmarks/run.py --smoke`` (REPRO_SMOKE=1): every
+    registered benchmark must still EXECUTE, emitting a SUBSET of its
+    full-run CSV rows (same names, shrunk sweeps/step counts) so the
+    whole suite fits a CI smoke budget and rows stay comparable to
+    committed baselines."""
+    return os.environ.get("REPRO_SMOKE", "") == "1"
+
+
+def pick(full, small):
+    """``full`` normally, ``small`` under smoke (sweep lists, steps)."""
+    return small if smoke() else full
 
 
 def time_call(fn: Callable, *args, repeats: int = 3, warmup: int = 1):

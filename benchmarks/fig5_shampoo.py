@@ -15,12 +15,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, pick
 from repro.config import OptimizerConfig, PrismConfig
 from repro.optim import base, make_optimizer
 
 D_IN, D_H, N_CLS = 3 * 32 * 32, 512, 10
-STEPS, BATCH = 30, 128
+STEPS, BATCH = 30, 128  # smoke: 16 steps (see _steps())
 
 
 def _init_params(key):
@@ -72,13 +72,14 @@ def _train(method):
 
     losses = []
     t0 = None
-    for t in range(STEPS):
+    steps = pick(STEPS, 16)
+    for t in range(steps):
         params, state, loss = step_fn(params, state, jnp.asarray(t))
         jax.block_until_ready(loss)
         if t == 0:
             t0 = time.perf_counter()  # exclude compile
         losses.append(float(loss))
-    wall = (time.perf_counter() - t0) / (STEPS - 1)
+    wall = (time.perf_counter() - t0) / (steps - 1)
     return losses, wall
 
 

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, iters_to_tol, time_call
+from benchmarks.common import emit, iters_to_tol, pick, time_call
 from repro.config import PrismConfig
 from repro.core import matfn
 from repro.core import random_matrices as rm
@@ -41,10 +41,10 @@ def _bench(tag, A, key):
 
 def run():
     key = jax.random.PRNGKey(13)
-    for gamma in [1, 4, 50]:
+    for gamma in pick([1, 4, 50], [1]):
         G = rm.gaussian(key, N * gamma, N) / np.sqrt(N * gamma)
         _bench(f"figd3_wishart_gamma{gamma}", G.T @ G, key)
-    for kappa in [0.1, 0.5, 100.0]:
+    for kappa in pick([0.1, 0.5, 100.0], [0.1]):
         H = rm.htmp(key, 2 * N, N, kappa)
         _bench(f"figd4_htmp_sqrt_kappa{kappa:g}", H.T @ H, key)
 

@@ -1,23 +1,42 @@
 """Benchmark runner — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV lines (benchmarks.common.emit).
+
+``--smoke`` (or REPRO_SMOKE=1) shrinks every benchmark to CI-smoke scale
+— same modules, same CSV names, reduced sweeps/steps — so CI can assert
+that every registered benchmark at least executes.
 """
 from __future__ import annotations
 
+import argparse
+import os
+import sys
 import time
+
+# make `python benchmarks/run.py` work from anywhere: the repo root (the
+# `benchmarks` namespace package's parent) must be importable
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(
+    __file__))))
 
 
 def main() -> None:
-    from benchmarks import (bench_batched_matfn, fig1_sigma_sweep,
-                            fig3_gaussian, fig4_htmp, fig5_shampoo,
-                            fig6_muon_lm, figd3_sqrt, figd5_newton,
-                            roofline_table)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="shrunk sizes: every benchmark executes quickly")
+    args = ap.parse_args()
+    if args.smoke:
+        os.environ["REPRO_SMOKE"] = "1"
+
+    from benchmarks import (bench_batched_matfn, bench_sharded_precond,
+                            fig1_sigma_sweep, fig3_gaussian, fig4_htmp,
+                            fig5_shampoo, fig6_muon_lm, figd3_sqrt,
+                            figd5_newton, roofline_table)
 
     print("name,us_per_call,derived")
     t0 = time.time()
     for mod in [fig1_sigma_sweep, fig3_gaussian, fig4_htmp, figd3_sqrt,
                 figd5_newton, fig5_shampoo, fig6_muon_lm, roofline_table,
-                bench_batched_matfn]:
+                bench_batched_matfn, bench_sharded_precond]:
         name = mod.__name__.split(".")[-1]
         print(f"# --- {name} ---", flush=True)
         try:

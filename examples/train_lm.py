@@ -30,6 +30,10 @@ def main():
     ap.add_argument("--method", default="prism",
                     choices=["prism", "polar_express", "newton_schulz"])
     ap.add_argument("--ckpt_dir", default="/tmp/repro_lm_ckpt")
+    ap.add_argument("--precond_every", type=int, default=1,
+                    help="refresh the orthogonalization every K steps, "
+                         "serving cached polar factors in between "
+                         "(DESIGN.md §8)")
     args = ap.parse_args()
 
     cfg = get_config("gpt2-paper")
@@ -48,7 +52,7 @@ def main():
 
     ocfg = OptimizerConfig(
         name="muon", learning_rate=6e-3, momentum=0.95, weight_decay=0.01,
-        matfn_method=args.method,
+        matfn_method=args.method, precond_every=args.precond_every,
         prism=PrismConfig(degree=2, iterations=3, warm_alpha_iters=3,
                           sketch_dim=8))
     tcfg = TrainConfig(steps=args.steps, checkpoint_dir=args.ckpt_dir,

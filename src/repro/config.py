@@ -181,6 +181,21 @@ class OptimizerConfig:
     bucketed: bool = True
     bucket_pad: bool = False
     bucket_pad_slack: float = 0.25
+    # mesh-sharded preconditioner engine (DESIGN.md §8): partition each
+    # bucket's [B, m, n] batch dim over the (pod, data) mesh axes via
+    # shard_map — each device runs the fitted PRISM/NS chain only on its
+    # slice, then all-gathers the bucket.  "auto" activates whenever an
+    # activation-sharding context with a >1-sized batch axis is installed
+    # (launcher / multi-device tests); "off" keeps the replicated dispatch.
+    precond_shard: str = "auto"  # auto | off
+    # staleness-scheduled refresh: recompute matrix preconditioners (Muon
+    # polar factors, Shampoo inverse roots) every K steps and serve the
+    # K-1 steps in between from caches carried in the optimizer state.
+    # Exact at step 0 (count % K == 0 refreshes, so the first step always
+    # computes).  1 => refresh every step; Muon then carries no cache.
+    # Shampoo's effective period is max(precond_every, precondition_every)
+    # (the latter is the legacy Shampoo-only knob).
+    precond_every: int = 1
     # distributed tricks
     gradient_compression: str = "none"  # none | int8
     # "bfloat16": differentiate wrt the bf16 compute params so the data-

@@ -9,14 +9,37 @@ from __future__ import annotations
 import jax
 
 
+def compat_make_mesh(shape, axes):
+    """jax.make_mesh across jax versions: axis_types/AxisType only exist
+    on newer releases (this container ships 0.4.37, where every mesh axis
+    is implicitly Auto — the semantics the newer call spells out)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def compat_abstract_mesh(shape, axes):
+    """jax.sharding.AbstractMesh across jax versions: 0.4.x takes a
+    ((name, size), ...) tuple, newer releases take (shape, names[,
+    axis_types]).  Metadata-only — for sharding-rule tests that need the
+    production mesh shape without 256 devices."""
+    from jax.sharding import AbstractMesh
+
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return AbstractMesh(shape, axes,
+                            axis_types=(axis_type.Auto,) * len(axes))
+    return AbstractMesh(tuple(zip(axes, shape)))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """TPU v5e production mesh: (data=16, model=16) per pod; the multi-pod
     variant adds a leading pure-DP "pod" axis (2 pods = 512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat_make_mesh(shape, axes)
 
 
 def make_debug_mesh(data: int = 2, model: int = 2, *,
@@ -25,6 +48,4 @@ def make_debug_mesh(data: int = 2, model: int = 2, *,
     caller via XLA_FLAGS before jax init)."""
     shape = (pods, data, model) if multi_pod else (data, model)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat_make_mesh(shape, axes)

@@ -89,12 +89,13 @@ def pipeline_apply(mesh, stage_fn: Callable, stage_params, x,
     mb = B // n_micro
     x_micro = x.reshape((n_micro, mb) + x.shape[1:])
     run = gpipe_forward(stage_fn, axis, n_stages, n_micro)
-    mapped = jax.shard_map(
+    from repro.sharding_ctx import compat_shard_map
+
+    mapped = compat_shard_map(
         run, mesh=mesh,
         in_specs=(P(axis), P()),
         out_specs=P(axis),  # per-stage outputs stacked; last stage valid
-        check_vma=False,
-        axis_names=frozenset({axis}))  # other mesh axes stay "auto"
+        axis_names={axis})  # other mesh axes stay "auto"
     outs = mapped(stage_params, x_micro)
     # outs [n_stages * n_micro, mb, ...]: only the last stage's block is
     # the real output (earlier stages contributed zeros)

@@ -224,6 +224,27 @@ def decode_input_shardings(mesh: Mesh, cfg: ModelConfig, batch_size: int):
     return {"tokens": tok, "pos": NamedSharding(mesh, P(b, None))}
 
 
+def precond_cache_sharding(mesh: Mesh, shape: Tuple[int, ...]):
+    """Sharding for cached preconditioner buffers in the optimizer state
+    (Muon "ortho" matrix views [..lead.., m, n], Shampoo "Linv"/"Rinv"
+    inverse roots [..lead.., n, n]) whose layout differs from the param
+    (transposed/flattened views, factor squares).
+
+    Layout mirrors the muon_local_reshard rule (DESIGN.md §4): the leading
+    scanned-layer dim over model, the row dim over data — so a staleness
+    cache adds O(bytes / mesh) per device instead of O(bytes), and a
+    refresh step's all-gathered bucket scatters straight into the shards.
+    constrain_spec drops axes from dims they don't divide, so any shape
+    stays legal on any mesh.
+    """
+    entries: list = [None] * len(shape)
+    if len(shape) >= 3 and "model" in mesh.axis_names:
+        entries[0] = "model"
+    if len(shape) >= 2 and "data" in mesh.axis_names:
+        entries[-2] = "data"
+    return NamedSharding(mesh, constrain_spec(mesh, P(*entries), shape))
+
+
 def replicated(mesh: Mesh):
     return NamedSharding(mesh, P())
 

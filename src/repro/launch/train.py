@@ -46,6 +46,9 @@ def main():
     ap.add_argument("--ckpt_every", type=int, default=50)
     ap.add_argument("--compression", default="none",
                     choices=["none", "int8"])
+    ap.add_argument("--precond_every", type=int, default=1,
+                    help="staleness period K: refresh matrix "
+                         "preconditioners every K steps (DESIGN.md §8)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -54,6 +57,7 @@ def main():
     ocfg = OptimizerConfig(
         name=args.optimizer, learning_rate=args.lr,
         matfn_method=args.method, gradient_compression=args.compression,
+        precond_every=args.precond_every,
         prism=PrismConfig(degree=2, iterations=3, warm_alpha_iters=3,
                           sketch_dim=8))
     tcfg = TrainConfig(steps=args.steps, checkpoint_dir=args.ckpt_dir,

@@ -15,7 +15,9 @@ def make_adamw(cfg: OptimizerConfig) -> base.Optimizer:
                 "nu": jax.tree.map(jnp.copy, z),
                 "count": jnp.zeros((), jnp.int32)}
 
-    def update(grads, state, params, step, key):
+    def update(grads, state, params, step, key, refresh=None):
+        # refresh is the matrix-preconditioner staleness override (see
+        # base.Optimizer); AdamW has no preconditioner cache to refresh
         b1, b2 = cfg.beta1, cfg.beta2
         t = (state["count"] + 1).astype(jnp.float32)
         mom = jax.tree.map(lambda m, g: b1 * m + (1 - b1) *

@@ -9,7 +9,18 @@ import jax.numpy as jnp
 
 class Optimizer(NamedTuple):
     """init(params) -> state;
-    update(grads, state, params, step, key) -> (new_params, new_state)."""
+    update(grads, state, params, step, key, refresh=None)
+        -> (new_params, new_state).
+
+    ``refresh`` is the staleness-schedule override for cached matrix
+    preconditioners (OptimizerConfig.precond_every, DESIGN.md §8):
+      None  — dynamic: the optimizer decides from state["count"] under a
+              lax.cond (single compiled step, both branches traced);
+      bool  — static: the branch is picked at trace time, so the trainer
+              can compile a skip-step variant that contains zero
+              matrix-function work (and a refresh variant that always
+              recomputes).  Optimizers without caches ignore it.
+    """
 
     init: Callable[[Any], Any]
     update: Callable[..., Tuple[Any, Any]]

@@ -28,14 +28,27 @@ those paths bucket exact shapes only.
 
 The plan is pure Python over static shapes — it runs at trace time and
 costs nothing inside jit.
+
+Mesh-sharded dispatch (DESIGN.md §8): a batched bucket call is exact
+per-slice math — per-slice Frobenius normalization and a per-slice alpha
+fit against a sketch S shared only through the PRNG key — so the batch
+dim partitions freely across devices.  When an activation-sharding
+context is installed (launcher, multi-device tests) each bucket's
+[B, m, n] batch dim is shard_map'ed over the (pod, data) mesh axes:
+every device runs the fitted chain on B/shards matrices instead of all
+B replicated, and the slice results are all-gathered back into the full
+bucket before ``scatter_bucket``.  Buckets whose B does not divide the
+shard count pad with identity slices (finite, self-contained chains
+that are dropped after the gather).
 """
 from __future__ import annotations
 
-from typing import List, NamedTuple, Optional, Sequence, Tuple
+from typing import Callable, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro import sharding_ctx
 from repro.config import OptimizerConfig
 from repro.core import matfn
 
@@ -151,6 +164,75 @@ def _gram_real_dims(bucket: Bucket) -> jax.Array:
     return jnp.asarray(reals, jnp.int32)
 
 
+# ------------------------------------------------------------------ sharding
+
+def mesh_batch_axes(cfg: Optional[OptimizerConfig]):
+    """(mesh, axes) for batch-dim sharding, or (None, ()) when inactive.
+
+    Active iff ``cfg.precond_shard == "auto"``, an activation-sharding
+    context is installed, and the mesh has a >1-sized batch axis.  Only
+    the pure data-parallel axes partition the bucket — the model axis
+    keeps its role of sharding the matrices themselves (TP), so each
+    model-slice group computes the same batch slice redundantly, exactly
+    as the forward pass replicates data-parallel work across model.
+    """
+    if cfg is None or getattr(cfg, "precond_shard", "off") != "auto":
+        return None, ()
+    ctx = sharding_ctx.current()
+    if ctx is None:
+        return None, ()
+    mesh, _ = ctx
+    axes = tuple(a for a in ("pod", "data")
+                 if a in mesh.axis_names and mesh.shape[a] > 1)
+    return (mesh, axes) if axes else (None, ())
+
+
+def shard_over_batch(fn: Callable, mesh, axes: Tuple[str, ...],
+                     stacked: jax.Array,
+                     slice_args: Sequence[jax.Array] = (),
+                     slice_pads: Sequence = ()) -> jax.Array:
+    """Run ``fn(stacked, *slice_args)`` with the leading batch dim
+    partitioned over mesh ``axes`` via shard_map; all-gather the result.
+
+    ``slice_args`` are per-slice companions ([B, ...], e.g. the n_real
+    trace-correction vector) that shard with the batch; ``slice_pads``
+    gives the fill value appended to each when B pads up to a multiple of
+    the shard count.  Batch padding uses identity slices: every PRISM/NS
+    path normalizes and fits per slice, so pad slices run finite,
+    self-contained chains that cannot perturb the real ones and are
+    sliced away after the gather.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    n_shards = 1
+    for a in axes:
+        n_shards *= mesh.shape[a]
+    B, M, N = stacked.shape
+    pad = (-B) % n_shards
+    if pad:
+        eye = jnp.broadcast_to(jnp.eye(M, N, dtype=stacked.dtype),
+                               (pad, M, N))
+        stacked = jnp.concatenate([stacked, eye], axis=0)
+        slice_args = [
+            jnp.concatenate([s, jnp.full((pad,) + s.shape[1:], v,
+                                         dtype=s.dtype)], axis=0)
+            for s, v in zip(slice_args, slice_pads)]
+    ax = axes if len(axes) > 1 else axes[0]
+
+    def local(x, *extras):
+        return jax.lax.all_gather(fn(x, *extras), ax, axis=0, tiled=True)
+
+    def batch_spec(r):
+        return P(*((ax,) + (None,) * (r - 1)))
+
+    out = sharding_ctx.compat_shard_map(
+        local, mesh=mesh,
+        in_specs=tuple(batch_spec(a.ndim)
+                       for a in [stacked, *slice_args]),
+        out_specs=P(*((None,) * stacked.ndim)))(stacked, *slice_args)
+    return out[:B] if pad else out
+
+
 def polar_bucketed(views: Sequence[jax.Array], cfg: OptimizerConfig,
                    key: Optional[jax.Array]) -> List[jax.Array]:
     """Polar factor of every matrix view via one batched call per bucket."""
@@ -158,44 +240,71 @@ def polar_bucketed(views: Sequence[jax.Array], cfg: OptimizerConfig,
     pad = cfg.bucket_pad and method != "svd"
     buckets = plan_buckets([v.shape for v in views], pad=pad,
                            pad_slack=cfg.bucket_pad_slack)
+    mesh, mesh_axes = mesh_batch_axes(cfg)
     outs: List[Optional[jax.Array]] = [None] * len(views)
     for bi, b in enumerate(buckets):
         stacked = gather_bucket(b, views)
-        if cfg.muon_local_reshard and all(e.lead for e in b.entries):
+        local_reshard = (cfg.muon_local_reshard
+                         and all(e.lead for e in b.entries))
+        if local_reshard:
             # layers -> model, rows -> data (see make_muon): the batched NS
             # iterations then need only one [n, n] R-psum per step.  Like
             # the per-leaf path (which resharded only M.ndim >= 3 views),
             # this applies only to buckets built purely from scanned-layer
             # stacks — plain 2-D leaves keep their layout, and a mixed
-            # bucket is not co-sharded unevenly over opt_layers.
-            from repro.sharding_ctx import shard_activation
+            # bucket is not co-sharded unevenly over opt_layers.  Takes
+            # precedence over the batch-dim shard_map engine: the two are
+            # alternative distribution strategies for the same bucket.
+            stacked = sharding_ctx.shard_activation(
+                stacked, ("opt_layers", "opt_rows", None))
+        kk = (jax.random.fold_in(key, bi) if key is not None else None)
+        n_real = (_gram_real_dims(b)
+                  if b.padded and method == "prism" else None)
 
-            stacked = shard_activation(stacked,
-                                       ("opt_layers", "opt_rows", None))
-        if method == "svd":
-            O = matfn.polar(stacked, method="svd")
+        def run(x, *nr, _kk=kk):
+            if method == "svd":
+                return matfn.polar(x, method="svd")
+            kw = {"n_real": nr[0]} if nr else {}
+            return matfn.polar(x, method=method, cfg=cfg.prism, key=_kk,
+                               **kw)
+
+        if mesh is not None and not local_reshard:
+            gram_full = min(b.shape)  # pad slices carry no intra-slice pad
+            O = shard_over_batch(
+                run, mesh, mesh_axes, stacked,
+                slice_args=() if n_real is None else (n_real,),
+                slice_pads=() if n_real is None else (gram_full,))
         else:
-            kk = (jax.random.fold_in(key, bi) if key is not None else None)
-            kw = {}
-            if b.padded and method == "prism":
-                kw["n_real"] = _gram_real_dims(b)
-            O = matfn.polar(stacked, method=method, cfg=cfg.prism, key=kk,
-                            **kw)
+            O = run(stacked) if n_real is None else run(stacked, n_real)
         scatter_bucket(b, O, outs)
     return outs  # type: ignore[return-value]
 
 
-def transform_bucketed(mats: Sequence[jax.Array], fn) -> List[jax.Array]:
+def transform_bucketed(mats: Sequence[jax.Array], fn,
+                       cfg: Optional[OptimizerConfig] = None
+                       ) -> List[jax.Array]:
     """Apply ``fn(stacked, bucket, bucket_index)`` once per exact-shape
     bucket and scatter the [B, n, n] results back.
 
     The generic engine for matrix functions without a pad-exactness story
-    (Shampoo inverse roots): fn sees the stacked bucket plus its Bucket —
-    enough to gather companion arrays (cached inverses), fold a per-bucket
-    PRNG key, or wrap a lax.cond around a recompute schedule.
+    (Shampoo inverse roots).  With a ``cfg`` and an active sharding
+    context the batch dim shard_maps over the mesh like
+    ``polar_bucketed`` (identity pad slices are SPD, so the Shampoo
+    inverse-root chains on them stay finite) — fn's ``stacked`` argument
+    is then a LOCAL, possibly identity-padded batch slice, NOT the full
+    bucket.  fn must therefore be per-slice (elementwise over the batch
+    dim); use the Bucket/index only for static metadata (shape, PRNG
+    folding), never to index companion arrays by entry offset.
     """
     buckets = plan_buckets([m.shape for m in mats], pad=False)
+    mesh, mesh_axes = mesh_batch_axes(cfg)
     outs: List[Optional[jax.Array]] = [None] * len(mats)
     for bi, b in enumerate(buckets):
-        scatter_bucket(b, fn(gather_bucket(b, mats), b, bi), outs)
+        stacked = gather_bucket(b, mats)
+        if mesh is not None:
+            out = shard_over_batch(lambda x, _b=b, _bi=bi: fn(x, _b, _bi),
+                                   mesh, mesh_axes, stacked)
+        else:
+            out = fn(stacked, b, bi)
+        scatter_bucket(b, out, outs)
     return outs  # type: ignore[return-value]

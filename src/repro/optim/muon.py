@@ -14,7 +14,17 @@ one per leaf.  ``cfg.bucketed=False`` restores the per-leaf loop.
 
 Under pjit the polar iteration's GEMMs run on *sharded* momentum matrices,
 so orthogonalization is distributed for free (DION-style), and the PRISM
-sketch fit adds only O(n^2 p / shards) work per fitted iteration.
+sketch fit adds only O(n^2 p / shards) work per fitted iteration.  With an
+activation-sharding context the bucketed engine additionally shard_maps
+each bucket's batch dim over the (pod, data) axes (DESIGN.md §8).
+
+``cfg.precond_every = K > 1`` amortizes the matrix-function work over K
+steps: every matrix leaf carries a cached orthogonalized view ("ortho")
+in the state, refreshed when count % K == 0 (exact at step 0) and reused
+— against the *fresh* momentum-accumulating state — in between.  The
+``refresh`` argument of ``update`` overrides the schedule statically: a
+Python bool picks the branch at trace time, so a skip step compiles with
+zero matrix-function work (the launch-count contract of DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -44,7 +54,14 @@ def make_muon(cfg: OptimizerConfig, axes_tree) -> base.Optimizer:
         for p, a in zip(flat_p, flat_a):
             mom = jnp.zeros(p.shape, jnp.float32)
             if base.is_matrix_param(a, p.shape):
-                state.append({"mom": mom})
+                s = {"mom": mom}
+                if cfg.precond_every > 1:
+                    # staleness cache: the orthogonalized momentum VIEW
+                    # (possibly transposed/flattened vs the param layout)
+                    M, _ = base.to_matrix_view(
+                        jnp.zeros(p.shape, jnp.float32), a)
+                    s["ortho"] = jnp.zeros(M.shape, jnp.float32)
+                state.append(s)
             else:
                 state.append({"mom": mom,
                               "nu": jnp.zeros(p.shape, jnp.float32)})
@@ -72,7 +89,7 @@ def make_muon(cfg: OptimizerConfig, axes_tree) -> base.Optimizer:
                                         cfg=cfg.prism, key=kk))
         return outs
 
-    def update(grads, state, params, step, key):
+    def update(grads, state, params, step, key, refresh=None):
         flat_g, flat_a, treedef = _flatten_with_axes(grads, axes_tree)
         flat_p = jax.tree.leaves(params)
         flat_s = treedef.flatten_up_to(state["leaves"])
@@ -93,6 +110,8 @@ def make_muon(cfg: OptimizerConfig, axes_tree) -> base.Optimizer:
                 metas.append(meta)
                 leaf_idx.append(i)
                 new_s[i] = {"mom": mom}
+                if cfg.precond_every > 1:
+                    new_s[i]["ortho"] = s["ortho"]
             else:
                 # AdamW for non-matrix params
                 b1, b2 = cfg.beta1, cfg.beta2
@@ -107,11 +126,28 @@ def make_muon(cfg: OptimizerConfig, axes_tree) -> base.Optimizer:
                 new_s[i] = {"mom": mom, "nu": nu}
                 new_p[i] = p32.astype(p.dtype)
         # orthogonalize: one batched call per shape bucket (the per-leaf
-        # Python loop survives only behind cfg.bucketed=False)
-        if cfg.bucketed:
-            polars = bucketing.polar_bucketed(views, cfg, key)
+        # Python loop survives only behind cfg.bucketed=False).  With
+        # precond_every=K>1 the polar chains run behind the staleness
+        # schedule: refreshed when count % K == 0 (or when the static
+        # ``refresh`` override says so), served from the "ortho" cache
+        # otherwise — a skip step moves zero matrix-function bytes.
+        def compute_polars():
+            if cfg.bucketed:
+                return bucketing.polar_bucketed(views, cfg, key)
+            return _polar_per_leaf(views, leaf_idx, key)
+
+        if cfg.precond_every > 1 and views:
+            cached = [flat_s[i]["ortho"] for i in leaf_idx]
+            if isinstance(refresh, bool):  # static: picked at trace time
+                polars = compute_polars() if refresh else cached
+            else:
+                do = (state["count"] % cfg.precond_every) == 0
+                polars = jax.lax.cond(do, compute_polars,
+                                      lambda: list(cached))
+            for O, i in zip(polars, leaf_idx):
+                new_s[i]["ortho"] = O
         else:
-            polars = _polar_per_leaf(views, leaf_idx, key)
+            polars = compute_polars()
         # pass 2: aspect-scale, un-view, apply
         for O, meta, i in zip(polars, metas, leaf_idx):
             p = flat_p[i]

@@ -16,6 +16,14 @@ Inverse-root dispatch is shape-bucketed by default (optim/bucketing.py):
 the L and R preconditioners of every matrix leaf — across leaves — stack
 into one [B, n, n] batched call per distinct n, under a single recompute
 cond per bucket.  ``cfg.bucketed=False`` restores the per-leaf loop.
+With an activation-sharding context each bucket's batch dim additionally
+shard_maps over the (pod, data) mesh axes (DESIGN.md §8).
+
+The refresh period is max(cfg.precond_every, cfg.precondition_every) —
+the former is the unified staleness knob shared with Muon, the latter
+the legacy Shampoo-only one.  ``update(..., refresh=<bool>)`` overrides
+the schedule statically: the skip branch then compiles with zero
+inverse-root work instead of a runtime lax.cond.
 """
 from __future__ import annotations
 
@@ -84,18 +92,26 @@ def make_shampoo(cfg: OptimizerConfig, axes_tree,
     def _inv_roots_bucketed(mats, prevs, recompute, key):
         """All buckets under ONE recompute cond: the cache-hit branch
         returns the per-leaf cached inverses untouched, so steps between
-        recomputes move zero preconditioner bytes (no gather/scatter)."""
+        recomputes move zero preconditioner bytes (no gather/scatter).
+        A static (Python bool) ``recompute`` picks the branch at trace
+        time instead — the skip variant contains no inverse-root ops."""
         def compute():
             def one_bucket(stacked, b, bi):
                 kk = (jax.random.fold_in(key, bi)
                       if key is not None else None)
                 return _inv_root(stacked, p_root, cfg, kk)
 
-            return bucketing.transform_bucketed(mats, one_bucket)
+            return bucketing.transform_bucketed(mats, one_bucket, cfg)
 
+        if isinstance(recompute, bool):
+            return compute() if recompute else list(prevs)
         return jax.lax.cond(recompute, compute, lambda: list(prevs))
 
     def _inv_roots_per_leaf(mats, prevs, recompute, keys):
+        if isinstance(recompute, bool):
+            return ([_inv_root(A, p_root, cfg, kk)
+                     for A, kk in zip(mats, keys)] if recompute
+                    else list(prevs))
         outs = []
         for A, prev, kk in zip(mats, prevs, keys):
             outs.append(jax.lax.cond(
@@ -104,12 +120,14 @@ def make_shampoo(cfg: OptimizerConfig, axes_tree,
                 lambda prev=prev: prev))
         return outs
 
-    def update(grads, state, params, step, key):
+    def update(grads, state, params, step, key, refresh=None):
         flat_g, flat_a, treedef = _flatten_with_axes(grads, axes_tree)
         flat_p = jax.tree.leaves(params)
         flat_s = treedef.flatten_up_to(state["leaves"])
         lr = cfg.learning_rate
-        recompute = (state["count"] % cfg.precondition_every) == 0
+        every = max(cfg.precond_every, cfg.precondition_every)
+        recompute = (refresh if isinstance(refresh, bool)
+                     else (state["count"] % every) == 0)
         beta2 = 0.999
         new_p = [None] * len(flat_g)
         new_s = [None] * len(flat_g)

@@ -24,9 +24,16 @@ def master_params(params):
 
 def make_train_step(model: Model, opt: base.Optimizer,
                     ocfg: OptimizerConfig) -> Callable:
+    """Build train_step(params, opt_state, batch, step, refresh=None).
+
+    ``refresh`` is the preconditioner staleness override (base.Optimizer):
+    jit it as a STATIC argument (static_argnums=(4,)) so a Python bool
+    compiles separate refresh/skip variants — the skip variant contains
+    zero matrix-function work.  None keeps the dynamic in-state schedule.
+    """
     cast_tree = model.param_dtypes()
 
-    def train_step(params, opt_state, batch, step):
+    def train_step(params, opt_state, batch, step, refresh=None):
         if ocfg.grads_dtype == "bfloat16":
             # differentiate wrt the bf16 compute params: the DP gradient
             # reduce-scatter then moves bf16 (half the wire bytes); the
@@ -46,7 +53,8 @@ def make_train_step(model: Model, opt: base.Optimizer,
         if ocfg.gradient_compression == "int8":
             grads = compression.int8_roundtrip(grads)
         key = jax.random.fold_in(jax.random.PRNGKey(0), step)
-        params, opt_state = opt.update(grads, opt_state, params, step, key)
+        params, opt_state = opt.update(grads, opt_state, params, step, key,
+                                       refresh=refresh)
         metrics = dict(metrics, loss=loss, grad_norm=gnorm)
         return params, opt_state, metrics
 
@@ -72,11 +80,20 @@ def opt_state_shardings(mesh, opt: base.Optimizer, param_shapes,
                 for k, v in state_shapes.items()}
 
     is_slot = lambda x: isinstance(x, dict) and "mom" in x
+    from repro.launch.sharding import precond_cache_sharding
 
     def per_param(slot, pshape, pshard):
         out = {}
         for k, v in slot.items():
-            out[k] = pshard if tuple(v.shape) == tuple(pshape.shape) else rep
+            if tuple(v.shape) == tuple(pshape.shape):
+                out[k] = pshard
+            elif k in ("ortho", "Linv", "Rinv") and len(v.shape) >= 2:
+                # cached preconditioners whose layout differs from the
+                # param (matrix views / factor squares): ZeRO-style
+                # lead->model, rows->data instead of full replication
+                out[k] = precond_cache_sharding(mesh, tuple(v.shape))
+            else:
+                out[k] = rep
         return out
 
     leaves = jax.tree.map(per_param, state_shapes["leaves"], param_shapes,

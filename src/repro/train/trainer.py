@@ -41,15 +41,20 @@ class Trainer:
         self.opt = make_optimizer(ocfg, model.logical_axes())
         self.batch_fn = make_batch_fn(model.cfg, dcfg)
         step_fn = make_train_step(model, self.opt, ocfg)
+        # refresh (arg 4) is static: with precond_every=K>1 the loop picks
+        # the refresh/skip step variant per step in Python (exact at step
+        # 0), and the skip variant compiles with ZERO matrix-function
+        # work.  K=1 passes None throughout — a single compiled step.
         if mesh is not None and shardings is not None:
             self.step_fn = jax.jit(
                 step_fn,
                 in_shardings=(shardings["params"], shardings["opt"],
                               shardings["batch"], None),
                 out_shardings=(shardings["params"], shardings["opt"], None),
-                donate_argnums=(0, 1))
+                donate_argnums=(0, 1), static_argnums=(4,))
         else:
-            self.step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+            self.step_fn = jax.jit(step_fn, donate_argnums=(0, 1),
+                                   static_argnums=(4,))
         self._ckpt_thread = None
         self.step_times: list = []
         self.straggler_events = 0
@@ -89,11 +94,18 @@ class Trainer:
         hb_path = os.path.join(self.tcfg.checkpoint_dir, "HEARTBEAT")
         os.makedirs(self.tcfg.checkpoint_dir, exist_ok=True)
         losses = []
+        # effective staleness period: shampoo honors its legacy knob too,
+        # so the static schedule matches the dynamic in-state one
+        K = self.ocfg.precond_every
+        if self.ocfg.name == "shampoo":
+            K = max(K, self.ocfg.precondition_every)
         for t in range(start, steps):
             t0 = time.perf_counter()
             batch = self.batch_fn(jnp.asarray(t))
+            refresh = (t % K == 0) if K > 1 else None
             params, opt_state, metrics = self.step_fn(
-                params, opt_state, batch, jnp.asarray(t, jnp.int32))
+                params, opt_state, batch, jnp.asarray(t, jnp.int32),
+                refresh)
             jax.block_until_ready(metrics["loss"])
             dt = time.perf_counter() - t0
             if t > start:  # exclude compile step from straggler stats

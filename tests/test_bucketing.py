@@ -191,6 +191,40 @@ def test_constant_launch_count(monkeypatch, key, degree):
     assert counts == [2 + degree] * 3, counts
 
 
+def test_trainer_skip_step_zero_matfn_launches(monkeypatch, key):
+    """The staleness contract (DESIGN.md §8): a FULL trainer step compiled
+    with the static skip variant (refresh=False) issues ZERO matrix-
+    function kernel launches — the cached orthogonalized views serve the
+    update — while the refresh variant issues the bucketed counts."""
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "interpret")
+    from repro.configs import get_smoke_config
+    from repro.data import DataConfig, make_batch_fn
+    from repro.models import build
+    from repro.train.state import make_train_step, master_params
+
+    cfg = get_smoke_config("gpt2-paper").replace(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, d_ff=128)
+    model = build(cfg)
+    ocfg = OptimizerConfig(
+        name="muon", precond_every=4,
+        prism=PrismConfig(degree=2, iterations=2, warm_alpha_iters=1,
+                          sketch_dim=8, use_kernels=True))
+    opt = make_optimizer(ocfg, model.logical_axes())
+    step_fn = make_train_step(model, opt, ocfg)
+    params = master_params(model.init(key))
+    state = opt.init(params)
+    batch = make_batch_fn(cfg, DataConfig(vocab_size=cfg.vocab_size,
+                                          seq_len=16, global_batch=2,
+                                          markov_rank=8))(jnp.asarray(0))
+    step = jnp.asarray(0, jnp.int32)
+    n_skip = _count_pallas_launches(
+        lambda p, s, b: step_fn(p, s, b, step, False), params, state, batch)
+    n_refresh = _count_pallas_launches(
+        lambda p, s, b: step_fn(p, s, b, step, True), params, state, batch)
+    assert n_skip == 0, n_skip
+    assert n_refresh > 0, n_refresh
+
+
 def test_fitted_iteration_launches_scale_with_iters_only(monkeypatch, key):
     monkeypatch.setenv("REPRO_KERNEL_MODE", "interpret")
     def n_launches(iters, warm):

@@ -39,6 +39,9 @@ def test_latest_restart_point(tmp_path):
 
 INT8_PSUM_SCRIPT = textwrap.dedent("""
     import os
+    # pin CPU BEFORE jax imports: with libtpu in the image an unset
+    # JAX_PLATFORMS makes jax probe the TPU metadata server for minutes
+    os.environ["JAX_PLATFORMS"] = "cpu"
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     import sys
     sys.path.insert(0, "src")
@@ -47,12 +50,14 @@ INT8_PSUM_SCRIPT = textwrap.dedent("""
     from jax.sharding import PartitionSpec as P
     from repro.optim.compression import int8_psum
 
-    mesh = jax.make_mesh((4,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import compat_make_mesh
+    from repro.sharding_ctx import compat_shard_map
+
+    mesh = compat_make_mesh((4,), ("pod",))
     x = jnp.asarray(np.random.RandomState(0).randn(4, 1000), jnp.float32)
 
-    f = jax.shard_map(lambda a: int8_psum(a[0], "pod"), mesh=mesh,
-                      in_specs=P("pod"), out_specs=P())
+    f = compat_shard_map(lambda a: int8_psum(a[0], "pod"), mesh=mesh,
+                         in_specs=P("pod"), out_specs=P())
     with mesh:
         got = f(x)
     want = np.sum(np.asarray(x), axis=0)

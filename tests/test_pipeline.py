@@ -10,15 +10,18 @@ import textwrap
 
 SCRIPT = textwrap.dedent("""
     import os
+    # pin CPU BEFORE jax imports: with libtpu in the image an unset
+    # JAX_PLATFORMS makes jax probe the TPU metadata server for minutes
+    os.environ["JAX_PLATFORMS"] = "cpu"
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     import sys
     sys.path.insert(0, "src")
     import jax, jax.numpy as jnp
     import numpy as np
     from repro.launch.pipeline import pipeline_apply
+    from repro.launch.mesh import compat_make_mesh
 
-    mesh = jax.make_mesh((4,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat_make_mesh((4,), ("pod",))
     S, L_PER, D = 4, 2, 16
 
     def stage_fn(params, x):  # params [L_PER, D, D]

@@ -1,0 +1,226 @@
+"""Mesh-sharded preconditioner engine + staleness-scheduled refresh
+(DESIGN.md §8).
+
+Multi-device coverage runs in a subprocess on an 8-CPU-device host mesh
+(same pattern as test_sharded_train.py — the main test world stays
+single-device); the staleness-cache semantics are single-device and run
+in-process.  No hypothesis usage — these are example-based tests, so the
+suite collects without it (tests/conftest.py gates the property tests).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+
+from repro.config import OptimizerConfig, PrismConfig
+from repro.optim import make_optimizer
+
+SHARDED_SCRIPT = textwrap.dedent("""
+    import os
+    # pin CPU BEFORE jax imports: with libtpu in the image an unset
+    # JAX_PLATFORMS makes jax probe the TPU metadata server for minutes
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, "src")
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.config import OptimizerConfig, PrismConfig
+    from repro.launch.mesh import compat_make_mesh
+    from repro.launch import sharding as sh
+    from repro.optim import bucketing, make_optimizer
+    from repro.sharding_ctx import activation_sharding
+
+    key = jax.random.PRNGKey(0)
+    # one bucket with B = 3 + 1 + 1 + 1 = 6 — does NOT divide the 4-way
+    # data axis (uneven split: pads to 8 with identity slices), one
+    # square bucket, and one pad-to-bucket merge exercising the sharded
+    # n_real trace-correction path
+    shapes = [(3, 64, 32), (64, 32), (64, 32), (64, 32), (48, 48),
+              (48, 44)]
+    views = [jax.random.normal(jax.random.fold_in(key, i), s)
+             for i, s in enumerate(shapes)]
+    cfg = OptimizerConfig(prism=PrismConfig(degree=2, iterations=6,
+                                            warm_alpha_iters=1,
+                                            sketch_dim=8),
+                          bucket_pad=True)
+    # replicated reference: no sharding context installed
+    ref = bucketing.polar_bucketed(views, cfg, key)
+    mesh = compat_make_mesh((4, 2), ("data", "model"))
+    with mesh, activation_sharding(
+            mesh, {"opt_layers": "model", "opt_rows": "data"}):
+        mm, ax = bucketing.mesh_batch_axes(cfg)
+        assert mm is mesh and ax == ("data",), (mm, ax)
+        out = jax.jit(
+            lambda vs: bucketing.polar_bucketed(vs, cfg, key))(views)
+    for r, o in zip(ref, out):
+        np.testing.assert_allclose(np.asarray(r), np.asarray(o),
+                                   rtol=2e-5, atol=2e-5)
+
+    # optimizer-level parity: a full Muon update under the mesh equals
+    # the single-device update (same inputs, same key)
+    params = {"w": views[0], "v": views[4], "b": jnp.ones((64,))}
+    axes_tree = {"w": ("layers", "embed", "mlp"), "v": ("embed", "mlp"),
+                 "b": ("embed",)}
+    grads = jax.tree.map(
+        lambda p: jax.random.normal(jax.random.fold_in(key, 77), p.shape),
+        params)
+    ocfg = OptimizerConfig(name="muon", learning_rate=0.05,
+                           prism=PrismConfig(degree=2, iterations=5,
+                                             warm_alpha_iters=1,
+                                             sketch_dim=8))
+    opt = make_optimizer(ocfg, axes_tree)
+    p_ref, _ = jax.jit(opt.update)(grads, opt.init(params), params, 0, key)
+    with mesh, activation_sharding(
+            mesh, {"opt_layers": "model", "opt_rows": "data"}):
+        p_sh, _ = jax.jit(opt.update)(grads, opt.init(params), params, 0,
+                                      key)
+    for k in params:
+        np.testing.assert_allclose(np.asarray(p_ref[k]),
+                                   np.asarray(p_sh[k]),
+                                   rtol=2e-5, atol=2e-5)
+
+    # shampoo inverse-root path through the sharded transform_bucketed
+    socfg = OptimizerConfig(name="shampoo", learning_rate=1e-3,
+                            max_precond_dim=256,
+                            prism=PrismConfig(degree=2, iterations=8,
+                                              sketch_dim=8))
+    sopt = make_optimizer(socfg, axes_tree)
+    sp_ref, _ = jax.jit(sopt.update)(grads, sopt.init(params), params, 0,
+                                     key)
+    with mesh, activation_sharding(
+            mesh, {"opt_layers": "model", "opt_rows": "data"}):
+        sp_sh, _ = jax.jit(sopt.update)(grads, sopt.init(params), params,
+                                        0, key)
+    for k in params:
+        np.testing.assert_allclose(np.asarray(sp_ref[k]),
+                                   np.asarray(sp_sh[k]),
+                                   rtol=2e-5, atol=2e-5)
+    print("SHARDED_PRECOND_OK")
+""")
+
+
+def test_sharded_parity_8dev():
+    """Sharded == replicated bucketed PRISM on an 8-device host mesh,
+    including a bucket whose B does not divide the device count."""
+    env = dict(os.environ)
+    env.pop("JAX_PLATFORMS", None)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run([sys.executable, "-c", SHARDED_SCRIPT],
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))),
+                         env=env, capture_output=True, text=True,
+                         timeout=900)
+    assert "SHARDED_PRECOND_OK" in out.stdout, \
+        out.stdout[-2000:] + out.stderr[-3000:]
+
+
+# ------------------------------------------------------------- staleness
+
+
+def _tree(key):
+    params = {"w1": jax.random.normal(key, (64, 32)),
+              "w3": jax.random.normal(jax.random.fold_in(key, 2),
+                                      (3, 48, 32)),
+              "b": jax.random.normal(jax.random.fold_in(key, 4), (64,))}
+    axes = {"w1": ("embed", "mlp"), "w3": ("layers", "embed", "mlp"),
+            "b": ("embed",)}
+    return params, axes
+
+
+def test_staleness_reuses_cache_and_refreshes_on_K():
+    """precond_every=K serves the cached orthogonalized update for K-1
+    steps (cache bit-identical, update direction unchanged) and refreshes
+    exactly on step K."""
+    key = jax.random.PRNGKey(0)
+    params, axes = _tree(key)
+    ocfg = OptimizerConfig(name="muon", learning_rate=0.1,
+                           weight_decay=0.0, precond_every=3,
+                           prism=PrismConfig(degree=2, iterations=3,
+                                             warm_alpha_iters=1,
+                                             sketch_dim=8))
+    opt = make_optimizer(ocfg, axes)
+    state = opt.init(params)
+    assert "ortho" in state["leaves"]["w1"]  # cache carried in state
+    upd = jax.jit(opt.update)
+    p = params
+    deltas, orthos = [], []
+    for t in range(4):
+        g = jax.tree.map(
+            lambda x: jax.random.normal(jax.random.fold_in(key, 50 + t),
+                                        x.shape), p)
+        p2, state = upd(g, state, p, t, jax.random.fold_in(key, t))
+        deltas.append(np.asarray(p["w1"]) - np.asarray(p2["w1"]))
+        orthos.append(np.asarray(state["leaves"]["w1"]["ortho"]))
+        p = p2
+    # steps 1, 2 (count % 3 != 0): cache bit-identical to the step-0 fill
+    assert np.array_equal(orthos[0], orthos[1])
+    assert np.array_equal(orthos[1], orthos[2])
+    # update direction unchanged while stale (lr * scale * O_cached)
+    np.testing.assert_allclose(deltas[0], deltas[1], atol=1e-6)
+    np.testing.assert_allclose(deltas[1], deltas[2], atol=1e-6)
+    # step 3 (count % 3 == 0): refresh — new momentum orthogonalized
+    assert not np.array_equal(orthos[2], orthos[3])
+    assert np.abs(deltas[3] - deltas[2]).max() > 1e-4
+
+
+def test_static_refresh_matches_dynamic_schedule():
+    """update(..., refresh=<bool>) picks the same branch the in-state
+    count schedule would — params and caches agree step for step."""
+    key = jax.random.PRNGKey(1)
+    params, axes = _tree(key)
+    ocfg = OptimizerConfig(name="muon", learning_rate=0.1,
+                           weight_decay=0.0, precond_every=2,
+                           prism=PrismConfig(degree=2, iterations=3,
+                                             warm_alpha_iters=1,
+                                             sketch_dim=8))
+    opt = make_optimizer(ocfg, axes)
+    upd = jax.jit(opt.update, static_argnums=(5,))
+    grads = [jax.tree.map(
+        lambda x: jax.random.normal(jax.random.fold_in(key, 30 + t),
+                                    x.shape), params) for t in range(3)]
+    outs = {}
+    for mode in ("dynamic", "static"):
+        p, s = params, opt.init(params)
+        for t in range(3):
+            refresh = None if mode == "dynamic" else (t % 2 == 0)
+            p, s = upd(grads[t], s, p, t, jax.random.fold_in(key, t),
+                       refresh)
+        outs[mode] = (p, s)
+    for k in params:
+        np.testing.assert_allclose(np.asarray(outs["dynamic"][0][k]),
+                                   np.asarray(outs["static"][0][k]),
+                                   rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(outs["dynamic"][1]["leaves"]["w1"]["ortho"]),
+        np.asarray(outs["static"][1]["leaves"]["w1"]["ortho"]),
+        rtol=1e-6, atol=1e-6)
+
+
+def test_shampoo_static_refresh_matches_dynamic():
+    key = jax.random.PRNGKey(2)
+    params, axes = _tree(key)
+    ocfg = OptimizerConfig(name="shampoo", learning_rate=1e-3,
+                           precond_every=2, max_precond_dim=256,
+                           prism=PrismConfig(degree=2, iterations=8,
+                                             sketch_dim=8))
+    opt = make_optimizer(ocfg, axes)
+    upd = jax.jit(opt.update, static_argnums=(5,))
+    grads = [jax.tree.map(
+        lambda x: jax.random.normal(jax.random.fold_in(key, 40 + t),
+                                    x.shape), params) for t in range(3)]
+    outs = {}
+    for mode in ("dynamic", "static"):
+        p, s = params, opt.init(params)
+        for t in range(3):
+            refresh = None if mode == "dynamic" else (t % 2 == 0)
+            p, s = upd(grads[t], s, p, t, jax.random.fold_in(key, t),
+                       refresh)
+        outs[mode] = p
+    for k in params:
+        np.testing.assert_allclose(np.asarray(outs["dynamic"][k]),
+                                   np.asarray(outs["static"][k]),
+                                   rtol=1e-6, atol=1e-6)

@@ -9,6 +9,9 @@ import textwrap
 
 SCRIPT = textwrap.dedent("""
     import os
+    # pin CPU BEFORE jax imports: with libtpu in the image an unset
+    # JAX_PLATFORMS makes jax probe the TPU metadata server for minutes
+    os.environ["JAX_PLATFORMS"] = "cpu"
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import sys
     sys.path.insert(0, "src")
@@ -26,8 +29,8 @@ SCRIPT = textwrap.dedent("""
     from repro import checkpoint as ckpt
 
     def run_steps(mesh_shape, strategy, ckpt_dir, resume, grads_dtype):
-        mesh = jax.make_mesh(mesh_shape, ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import compat_make_mesh
+        mesh = compat_make_mesh(mesh_shape, ("data", "model"))
         cfg = get_smoke_config("qwen3-14b").replace(
             d_model=64, num_heads=4, num_kv_heads=2, head_dim=16)
         model = build(cfg)

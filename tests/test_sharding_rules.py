@@ -12,9 +12,9 @@ from repro.launch import sharding as sh
 def mesh():
     # metadata-only usage: a 1-device mesh can't express 16x16, so build
     # an abstract mesh with the production shape
-    return jax.sharding.AbstractMesh(
-        (16, 16), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import compat_abstract_mesh
+
+    return compat_abstract_mesh((16, 16), ("data", "model"))
 
 
 def test_constrain_spec_drops_nondivisible(mesh):

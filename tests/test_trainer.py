@@ -58,8 +58,9 @@ def test_elastic_restore_to_sharded(tmp_path):
 
     from repro import checkpoint as ckpt
 
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import compat_make_mesh
+
+    mesh = compat_make_mesh((1,), ("data",))
     tree = {"w": jnp.arange(16.0).reshape(4, 4)}
     ckpt.save(str(tmp_path), 3, tree)
     sh = {"w": NamedSharding(mesh, P("data", None))}
