@@ -1,4 +1,5 @@
-"""Per-leaf loop vs shape-bucketed batched PRISM polar (DESIGN.md §7).
+"""Per-leaf loop vs shape-bucketed batched PRISM polar (DESIGN.md §7),
+with a dtype axis for the mixed-precision engine (DESIGN.md §9).
 
 The workload models Muon over a stack of B same-shape layer weight
 matrices (the transformer hot path): the per-leaf engine calls
@@ -8,10 +9,19 @@ bucketed engine stacks the leaves and runs ONE batched chain.
 Reported per (n, B) cell:
   * wall clock per optimizer-step-equivalent call (ref-mode jnp GEMMs —
     the honest CPU number; on TPU the same dispatch structure holds),
+    for BOTH matfn dtypes: ``bucketed_ms`` (fp32) and
+    ``bucketed_bf16_ms`` (bf16 compute / fp32 accumulate),
+  * the modeled HBM bytes one fitted PRISM-NS iteration streams over the
+    bucket per dtype (``hbm_bytes_fp32`` / ``hbm_bytes_bf16``) — the
+    accelerator-transferable number: bf16 operands halve chain traffic
+    while accumulators/traces stay fp32.  On CPU, XLA emulates bf16 via
+    fp32 upcasts, so bf16 wall clock is expected NEUTRAL-to-slower here
+    (``bf16_speedup`` documents it); the HBM model is the TPU claim,
   * compile time of the first call (B unrolled chains vs one),
   * Pallas launches per step for the kernel path (counted by tracing with
-    REPRO_KERNEL_MODE=interpret): per-leaf scales as B * (2 + d),
-    bucketed stays constant at 2 + d (gram + fused chain + d Horner GEMMs).
+    REPRO_KERNEL_MODE=interpret and the interpret-size cutoff disabled —
+    counting only traces): per-leaf scales as B * (2 + d), bucketed
+    stays constant at 2 + d, and the count is dtype-independent.
 
 Writes the committed baseline BENCH_batched_matfn.json so later PRs have
 a perf trajectory.
@@ -40,14 +50,15 @@ OUT = os.path.join(os.path.dirname(os.path.dirname(__file__)),
                    "BENCH_batched_matfn.json")
 
 
-def _prism_cfg(n: int, use_kernels: bool = False) -> PrismConfig:
+def _prism_cfg(n: int, use_kernels: bool = False,
+               dtype: str = "float32") -> PrismConfig:
     return PrismConfig(degree=2, iterations=3 if n <= 256 else 2,
                        warm_alpha_iters=1, sketch_dim=8,
-                       use_kernels=use_kernels)
+                       use_kernels=use_kernels, dtype=dtype)
 
 
-def _engines(n: int, use_kernels: bool = False):
-    cfg = _prism_cfg(n, use_kernels)
+def _engines(n: int, use_kernels: bool = False, dtype: str = "float32"):
+    cfg = _prism_cfg(n, use_kernels, dtype)
 
     def per_leaf(views, key):
         return [matfn.polar(v, method="prism", cfg=cfg,
@@ -55,10 +66,30 @@ def _engines(n: int, use_kernels: bool = False):
                 for i, v in enumerate(views)]
 
     def bucketed(views, key):
-        ocfg = OptimizerConfig(prism=cfg)
+        ocfg = OptimizerConfig(prism=cfg, matfn_dtype=dtype)
         return bucketing.polar_bucketed(views, ocfg, key)
 
     return per_leaf, bucketed
+
+
+def hbm_bytes_per_iter(n: int, B: int, dtype: str, degree: int = 2,
+                       sketch_pad: int = 128) -> int:
+    """Modeled HBM bytes one fitted PRISM-NS iteration streams for a
+    [B, n, n] bucket in the given compute dtype (DESIGN.md §9).
+
+    gram reads X once and writes R; the fused sketch chain re-reads R
+    once per power (V stays in VMEM); each of the d Horner GEMMs reads
+    (acc, R, X) and writes acc.  Traces/alphas are O(p) fp32 scalars —
+    negligible and dtype-pinned, so they are omitted: operand bytes are
+    the whole story, which is exactly why bf16 halves the number.
+    """
+    item = 2 if dtype == "bfloat16" else 4
+    mats = B * n * n
+    max_power = 4 * degree + 2
+    gram = 2 * mats                      # read X, write R
+    chain = max_power * mats + B * n * sketch_pad  # R per power + St once
+    horner = degree * 4 * mats           # read acc, R, X; write acc
+    return item * (gram + chain + horner)
 
 
 def _count_launches(fn, views, key) -> int:
@@ -83,25 +114,41 @@ def run(write_json: bool = True):
                                        (n, n)) for i in range(B)]
             cell = {"n": n, "B": B,
                     "iterations": _prism_cfg(n).iterations}
-            # --- launch counts (kernel dispatch structure, trace only)
+            # --- launch counts (kernel dispatch structure, trace only;
+            # the interpret-size cutoff is disabled because counting
+            # never executes a kernel body — see kernels/ops.py)
             if count_launches:
                 prev = os.environ.get("REPRO_KERNEL_MODE")
+                prev_cut = os.environ.get("REPRO_INTERPRET_MAX_ELEMS")
                 os.environ["REPRO_KERNEL_MODE"] = "interpret"
+                os.environ["REPRO_INTERPRET_MAX_ELEMS"] = "0"
                 try:
                     pl_k, bu_k = _engines(n, use_kernels=True)
                     cell["launches_per_leaf"] = _count_launches(pl_k, views,
                                                                 key)
                     cell["launches_bucketed"] = _count_launches(bu_k, views,
                                                                 key)
+                    # dtype-independence of the §7 contract: the bf16
+                    # engine must trace the SAME launch structure
+                    _, bu16 = _engines(n, use_kernels=True,
+                                       dtype="bfloat16")
+                    cell["launches_bucketed_bf16"] = _count_launches(
+                        bu16, views, key)
                 finally:
-                    if prev is None:
-                        os.environ.pop("REPRO_KERNEL_MODE", None)
-                    else:
-                        os.environ["REPRO_KERNEL_MODE"] = prev
-            # --- wall clock + compile (ref mode jnp)
+                    for var, old in [("REPRO_KERNEL_MODE", prev),
+                                     ("REPRO_INTERPRET_MAX_ELEMS",
+                                      prev_cut)]:
+                        if old is None:
+                            os.environ.pop(var, None)
+                        else:
+                            os.environ[var] = old
+            # --- wall clock + compile (ref mode jnp); the dtype axis
+            # adds the bf16-policy bucketed engine
             per_leaf, bucketed = _engines(n)
+            _, bucketed16 = _engines(n, dtype="bfloat16")
             for name, fn in [("per_leaf", per_leaf),
-                             ("bucketed", bucketed)]:
+                             ("bucketed", bucketed),
+                             ("bucketed_bf16", bucketed16)]:
                 jfn = jax.jit(lambda vs, fn=fn: fn(vs, key))
                 t0 = time.perf_counter()
                 jax.block_until_ready(jfn(views))
@@ -118,17 +165,27 @@ def run(write_json: bool = True):
                 cell[f"{name}_ms"] = round(1e3 * min(ts), 2)
             cell["speedup"] = round(
                 cell["per_leaf_ms"] / max(cell["bucketed_ms"], 1e-9), 3)
+            cell["bf16_speedup"] = round(
+                cell["bucketed_ms"] / max(cell["bucketed_bf16_ms"], 1e-9),
+                3)
+            cell["hbm_bytes_fp32"] = hbm_bytes_per_iter(n, B, "float32")
+            cell["hbm_bytes_bf16"] = hbm_bytes_per_iter(n, B, "bfloat16")
             results.append(cell)
             extra = ({"launches_per_leaf": cell["launches_per_leaf"],
-                      "launches_bucketed": cell["launches_bucketed"]}
+                      "launches_bucketed": cell["launches_bucketed"],
+                      "launches_bucketed_bf16":
+                          cell["launches_bucketed_bf16"]}
                      if count_launches else {})
             emit(f"batched_matfn_n{n}_B{B}", 1e3 * cell["bucketed_ms"],
                  per_leaf_ms=cell["per_leaf_ms"],
                  bucketed_ms=cell["bucketed_ms"],
-                 speedup=cell["speedup"], **extra)
+                 bucketed_bf16_ms=cell["bucketed_bf16_ms"],
+                 speedup=cell["speedup"],
+                 bf16_speedup=cell["bf16_speedup"], **extra)
     out = {"benchmark": "bucketed batched PRISM polar vs per-leaf loop",
            "backend": jax.default_backend(),
            "prism": {"degree": 2, "warm_alpha_iters": 1, "sketch_dim": 8},
+           "dtypes": ["float32", "bfloat16"],
            "notes": [
                "wall clock is the CPU ref-mode (pure-jnp) number; the "
                "bucketed win is in the dispatch-bound regime (many small "
@@ -138,6 +195,13 @@ def run(write_json: bool = True):
                "GEMMs, so speedup < 1 there is a host artifact; on the "
                "TPU kernel path the same cells collapse B*(2+d) Pallas "
                "launches to 2+d (see launches_per_leaf/launches_bucketed).",
+               "dtype axis (DESIGN.md §9): bucketed_bf16_ms runs the "
+               "bf16-compute/fp32-accumulate policy.  XLA-CPU emulates "
+               "bf16 through fp32 upcasts, so CPU bf16 wall clock is "
+               "neutral-to-slower BY DESIGN (bf16_speedup ~<= 1 here is "
+               "expected, not a regression); the accelerator claim is "
+               "hbm_bytes_bf16 = hbm_bytes_fp32 / 2 at identical launch "
+               "counts (launches_bucketed_bf16 == launches_bucketed).",
            ],
            "results": results}
     if write_json:

@@ -46,6 +46,15 @@ def main() -> None:
                   flush=True)
     print(f"# total {time.time() - t0:.1f}s")
 
+    if args.smoke:
+        # smoke also gates the COMMITTED baselines on their schema, so a
+        # benchmark/baseline drift fails CI instead of rotting silently
+        from benchmarks import validate_bench
+
+        rc = validate_bench.main()
+        if rc:
+            sys.exit(rc)
+
 
 if __name__ == "__main__":
     main()

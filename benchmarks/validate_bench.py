@@ -1,0 +1,144 @@
+"""Schema validation for committed BENCH_*.json baselines.
+
+Run by CI's smoke step (and by ``benchmarks/run.py --smoke``) so a
+benchmark edit that drifts from its committed baseline's shape — a
+renamed field, a dropped dtype axis, a non-numeric cell — fails the PR
+instead of silently rotting the perf trajectory.  Hand-rolled checks
+(no jsonschema dependency in the container): a schema here is a dict of
+``field -> predicate`` for the top level and for each results row, plus
+cross-field invariants.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _is_num(x) -> bool:
+    return isinstance(x, (int, float)) and not isinstance(x, bool)
+
+
+def _nonneg(x) -> bool:
+    return _is_num(x) and x >= 0
+
+
+def _pos_int(x) -> bool:
+    return isinstance(x, int) and not isinstance(x, bool) and x > 0
+
+
+def _str_list(x) -> bool:
+    return isinstance(x, list) and x and all(isinstance(s, str) for s in x)
+
+
+BATCHED_MATFN_TOP = {
+    "benchmark": lambda x: isinstance(x, str) and x,
+    "backend": lambda x: isinstance(x, str) and x,
+    "prism": lambda x: isinstance(x, dict),
+    "dtypes": lambda x: _str_list(x) and "float32" in x and "bfloat16" in x,
+    "notes": _str_list,
+    "results": lambda x: isinstance(x, list) and x,
+}
+
+BATCHED_MATFN_ROW = {
+    "n": _pos_int,
+    "B": _pos_int,
+    "iterations": _pos_int,
+    "per_leaf_ms": _nonneg,
+    "bucketed_ms": _nonneg,
+    "bucketed_bf16_ms": _nonneg,
+    "per_leaf_compile_s": _nonneg,
+    "bucketed_compile_s": _nonneg,
+    "bucketed_bf16_compile_s": _nonneg,
+    "speedup": _nonneg,
+    "bf16_speedup": _nonneg,
+    "hbm_bytes_fp32": _pos_int,
+    "hbm_bytes_bf16": _pos_int,
+    # the committed baseline must carry the §7/§9 dispatch contract:
+    # regenerating under REPRO_KERNEL_MODE=ref skips launch counting and
+    # is rejected here — rerun without it
+    "launches_per_leaf": _pos_int,
+    "launches_bucketed": _pos_int,
+    "launches_bucketed_bf16": _pos_int,
+}
+
+
+def _check_batched_matfn_row(row: dict, where: str):
+    errs = []
+    for field, ok in BATCHED_MATFN_ROW.items():
+        if field not in row:
+            errs.append(f"{where}: missing field {field!r}")
+        elif not ok(row[field]):
+            errs.append(f"{where}: bad value {field}={row[field]!r}")
+    # §9 invariants: bf16 halves HBM bytes, launch counts dtype-blind
+    if _is_num(row.get("hbm_bytes_fp32")) and \
+            _is_num(row.get("hbm_bytes_bf16")) and \
+            row["hbm_bytes_bf16"] * 2 != row["hbm_bytes_fp32"]:
+        errs.append(f"{where}: hbm_bytes_bf16 must be half of fp32 "
+                    f"({row['hbm_bytes_bf16']} vs {row['hbm_bytes_fp32']})")
+    if "launches_bucketed" in row and \
+            row.get("launches_bucketed_bf16") != row["launches_bucketed"]:
+        errs.append(f"{where}: launch counts are dtype-dependent: "
+                    f"{row.get('launches_bucketed_bf16')} != "
+                    f"{row['launches_bucketed']}")
+    return errs
+
+
+def validate_batched_matfn(doc: dict, name: str):
+    errs = []
+    for field, ok in BATCHED_MATFN_TOP.items():
+        if field not in doc:
+            errs.append(f"{name}: missing top-level field {field!r}")
+        elif not ok(doc[field]):
+            errs.append(f"{name}: bad top-level {field}={doc[field]!r}")
+    for i, row in enumerate(doc.get("results") or []):
+        if not isinstance(row, dict):
+            errs.append(f"{name}: results[{i}] is not an object")
+            continue
+        errs.extend(_check_batched_matfn_row(row, f"{name}: results[{i}]"))
+    return errs
+
+
+VALIDATORS = {
+    "BENCH_batched_matfn.json": validate_batched_matfn,
+}
+
+
+def main() -> int:
+    paths = sorted(glob.glob(os.path.join(ROOT, "BENCH_*.json")))
+    if not paths:
+        print("validate_bench: no BENCH_*.json baselines found", flush=True)
+        return 1
+    errs = []
+    for path in paths:
+        name = os.path.basename(path)
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, ValueError) as e:
+            errs.append(f"{name}: unreadable JSON: {e}")
+            continue
+        validator = VALIDATORS.get(name)
+        if validator is None:
+            # unknown baselines must at least be well-formed objects
+            if not isinstance(doc, dict) or "results" not in doc:
+                errs.append(f"{name}: no schema registered and not a "
+                            "results document")
+            else:
+                print(f"validate_bench: {name} OK (generic)", flush=True)
+            continue
+        file_errs = validator(doc, name)
+        if file_errs:
+            errs.extend(file_errs)
+        else:
+            print(f"validate_bench: {name} OK", flush=True)
+    for e in errs:
+        print(f"validate_bench: ERROR {e}", flush=True)
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

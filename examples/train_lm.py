@@ -34,6 +34,12 @@ def main():
                     help="refresh the orthogonalization every K steps, "
                          "serving cached polar factors in between "
                          "(DESIGN.md §8)")
+    ap.add_argument("--matfn_dtype", default="float32",
+                    choices=["float32", "bfloat16"],
+                    help="compute dtype of the matrix-function engine — "
+                         "bfloat16 halves chain HBM traffic and cached "
+                         "optimizer state; accumulation and the PRISM "
+                         "fit stay fp32 (DESIGN.md §9)")
     args = ap.parse_args()
 
     cfg = get_config("gpt2-paper")
@@ -53,6 +59,7 @@ def main():
     ocfg = OptimizerConfig(
         name="muon", learning_rate=6e-3, momentum=0.95, weight_decay=0.01,
         matfn_method=args.method, precond_every=args.precond_every,
+        matfn_dtype=args.matfn_dtype,
         prism=PrismConfig(degree=2, iterations=3, warm_alpha_iters=3,
                           sketch_dim=8))
     tcfg = TrainConfig(steps=args.steps, checkpoint_dir=args.ckpt_dir,

@@ -17,6 +17,60 @@ from typing import Optional, Tuple
 
 
 @dataclass(frozen=True)
+class MatfnPrecision:
+    """Precision policy of the matrix-function engine (DESIGN.md §9).
+
+    Three roles, threaded end-to-end through core/, kernels/ and optim/:
+
+      compute:    dtype of GEMM operands and iterates (X, R, V, the
+                  sketch S).  "bfloat16" halves HBM traffic and
+                  optimizer-state bytes on TPU, where the MXU's native
+                  operand currency is bf16.
+      accumulate: dtype of MXU/dot accumulation.  PINNED float32 — every
+                  Pallas kernel uses an fp32 VMEM scratch accumulator
+                  (``preferred_element_type=jnp.float32``) and every
+                  pure-jnp oracle/iteration path mirrors that exactly.
+      fit:        dtype of the PRISM alpha machinery — sketched traces,
+                  the trace-weight map W, the closed-form minimization,
+                  Frobenius norms, and the §7 pad-trace correction.
+                  PINNED float32 (DESIGN.md §2/§9): the fit is O(n^2 p)
+                  scalars, so pinning costs nothing, while a bf16 fit
+                  would make alpha itself noisy instead of letting the
+                  fit *absorb* bf16 residual noise adaptively.
+    """
+
+    compute: str = "float32"
+    accumulate: str = "float32"
+    fit: str = "float32"
+
+    def __post_init__(self):
+        if self.accumulate != "float32":
+            raise ValueError("MatfnPrecision.accumulate is pinned float32 "
+                             f"(got {self.accumulate!r}); see DESIGN.md §9")
+        if self.fit != "float32":
+            raise ValueError("MatfnPrecision.fit is pinned float32 "
+                             f"(got {self.fit!r}); see DESIGN.md §9")
+
+    @property
+    def compute_dtype(self):
+        import jax.numpy as jnp
+
+        return jnp.dtype(self.compute)
+
+    @property
+    def accumulate_dtype(self):
+        import jax.numpy as jnp
+
+        return jnp.dtype(self.accumulate)
+
+    @property
+    def fit_dtype(self):
+        import jax.numpy as jnp
+
+        return jnp.dtype(self.fit)
+
+
+@dataclass(frozen=True)
 class PrismConfig:
     """Configuration of the PRISM matrix-function engine.
 
@@ -34,6 +88,9 @@ class PrismConfig:
         ([1/2, 1] for d=1, [3/8, 29/20] for d=2).
       use_kernels: route GEMM hot spots through the Pallas kernels (TPU);
         False uses pure-jnp reference paths (CPU tests, oracles).
+      dtype: COMPUTE dtype of the iteration (operands, iterates, sketch);
+        accumulation and the alpha fit stay fp32 regardless — see
+        ``precision`` / MatfnPrecision (DESIGN.md §9).
     """
 
     degree: int = 2
@@ -49,6 +106,12 @@ class PrismConfig:
         if self.alpha_bounds is not None:
             return self.alpha_bounds
         return {1: (0.5, 1.0), 2: (3.0 / 8.0, 29.0 / 20.0)}[self.degree]
+
+    @property
+    def precision(self) -> "MatfnPrecision":
+        """The full precision policy implied by ``dtype`` (accumulate and
+        fit pinned fp32 by construction)."""
+        return MatfnPrecision(compute=self.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -166,6 +229,17 @@ class OptimizerConfig:
     matfn_method: str = "prism"  # prism | polar_express | newton_schulz | eigh
     prism: PrismConfig = field(default_factory=lambda: PrismConfig(
         degree=2, iterations=3, warm_alpha_iters=3))
+    # mixed-precision matrix-function engine (DESIGN.md §9): COMPUTE dtype
+    # of the whole matfn stack — bucket gathers, NS/inverse-root chains,
+    # sketch chains.  "bfloat16" halves chain HBM reads; accumulation and
+    # the PRISM fit stay fp32 regardless (MatfnPrecision pins them).
+    # "float32" (default) defers to prism.dtype untouched.
+    matfn_dtype: str = "float32"
+    # dtype of the staleness caches carried in the optimizer state (Muon
+    # "ortho", Shampoo "Linv"/"Rinv").  "auto" follows matfn_dtype —
+    # bf16 halves cached optimizer state; sharding rules are unchanged
+    # (launch/sharding.py::precond_cache_sharding is dtype-independent).
+    precond_cache_dtype: str = "auto"  # auto | float32 | bfloat16
     adamw_lr_scale: float = 0.05   # lr scale for non-matrix params under muon
     # shampoo
     precondition_every: int = 1
@@ -206,6 +280,27 @@ class OptimizerConfig:
     # before the polar iteration: Newton-Schulz runs with one small R-psum
     # instead of full cross-mesh GEMM collectives (§Perf iteration 3).
     muon_local_reshard: bool = False
+
+    @property
+    def resolved_prism(self) -> PrismConfig:
+        """PrismConfig with ``matfn_dtype`` threaded in as the compute
+        dtype.  The default matfn_dtype="float32" leaves an explicitly
+        configured prism.dtype alone."""
+        if self.matfn_dtype == "float32" or \
+                self.matfn_dtype == self.prism.dtype:
+            return self.prism
+        return dataclasses.replace(self.prism, dtype=self.matfn_dtype)
+
+    @property
+    def matfn_precision(self) -> MatfnPrecision:
+        return self.resolved_prism.precision
+
+    @property
+    def cache_dtype(self) -> str:
+        """Storage dtype of the precond_every staleness caches."""
+        if self.precond_cache_dtype == "auto":
+            return self.resolved_prism.dtype
+        return self.precond_cache_dtype
 
 
 # ---------------------------------------------------------------------------

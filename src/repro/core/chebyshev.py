@@ -16,7 +16,7 @@ import jax.numpy as jnp
 
 from repro.core import polynomials as poly
 from repro.core import prism
-from repro.core.newton_schulz import IterInfo, _fro
+from repro.core.newton_schulz import IterInfo, _fro, _mm
 
 
 def inv(A: jax.Array, iters: int = 20, method: str = "prism",
@@ -29,11 +29,14 @@ def inv(A: jax.Array, iters: int = 20, method: str = "prism",
     c = _fro(A).astype(dtype)
     Ah = A.astype(dtype) / c
     X = jnp.swapaxes(Ah, -1, -2)
-    eye = jnp.eye(n, dtype=dtype)
     apoly = poly.chebyshev_residual()
     alphas, fros = [], []
     for k in range(iters):
-        R = eye - Ah @ X
+        # fp32-accumulated products, rounded once to the compute dtype
+        # (matches the kernel accumulation contract, DESIGN.md §9)
+        R = (jnp.eye(n, dtype=jnp.float32)
+             - jnp.matmul(Ah, X, preferred_element_type=jnp.float32)
+             ).astype(dtype)
         if method == "prism":
             # R = I - A X is NOT symmetric in general; the trace machinery
             # needs symmetric R, which holds here because X_0 = A^T makes
@@ -47,8 +50,8 @@ def inv(A: jax.Array, iters: int = 20, method: str = "prism",
             alphas.append(a)
             fros.append(_fro(R)[..., 0, 0])
         ab = a.astype(dtype)[..., None, None]
-        XR = X @ R
-        X = X + XR + ab * (XR @ R)
+        XR = _mm(X, R)
+        X = X + XR + ab * _mm(XR, R)
     out = (X / c).astype(in_dtype)
     if return_info:
         return out, IterInfo(jnp.stack(alphas), jnp.stack(fros))

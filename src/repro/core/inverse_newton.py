@@ -22,7 +22,7 @@ import jax.numpy as jnp
 from repro.config import PrismConfig
 from repro.core import polynomials as poly
 from repro.core import prism
-from repro.core.newton_schulz import IterInfo, _fro
+from repro.core.newton_schulz import IterInfo, _fro, _mm
 
 
 def inv_proot(A: jax.Array, p: int, iters: int = 20, method: str = "prism",
@@ -52,9 +52,10 @@ def inv_proot(A: jax.Array, p: int, iters: int = 20, method: str = "prism",
             fros.append(_fro(R)[..., 0, 0])
         ab = a.astype(dtype)[..., None, None]
         T = eye + ab * R
-        X = X @ T
+        # fp32-accumulated chain products (DESIGN.md §9)
+        X = _mm(X, T)
         for _ in range(p):
-            M = T @ M
+            M = _mm(T, M)
     # M_k = X_k^p A is invariant, so M_k -> I gives X_k -> A^{-1/p} directly;
     # the initial 1/c scaling needs no undoing.
     out = X.astype(in_dtype)

@@ -12,6 +12,12 @@ entry points; ``method`` selects the algorithm:
 
 "prism" methods adapt alpha per iteration from the sketched spectrum —
 distribution-free, no sigma_min estimate — per the paper.
+
+Precision (DESIGN.md §9): ``cfg.dtype`` (or the ``dtype`` kwarg of the
+cfg-free families) is the COMPUTE dtype threaded into every iteration;
+accumulation and the PRISM alpha fit are pinned fp32 by MatfnPrecision.
+The LAPACK baselines (svd / eigh / solve / DB-Newton's Cholesky) always
+run fp32 — bf16 inputs upcast in, results round back out.
 """
 from __future__ import annotations
 
@@ -35,9 +41,10 @@ def polar(A: jax.Array, method: str = "prism", cfg: PrismConfig = _DEF,
           **kw):
     """Polar factor U V^T (orthogonalization) of A [..., m, n]."""
     if method == "svd":
-        U, _, Vt = jnp.linalg.svd(A, full_matrices=False)
-        return U @ Vt
+        U, _, Vt = jnp.linalg.svd(A.astype(jnp.float32), full_matrices=False)
+        return (U @ Vt).astype(A.dtype)
     if method == "polar_express":
+        kw.setdefault("dtype", cfg.dtype)
         return _pe.polar(A, iters=iters or 8, **kw)
     return _ns.polar(A, cfg=cfg, method=method, iters=iters, key=key, **kw)
 
@@ -47,13 +54,15 @@ def sqrtm(A: jax.Array, method: str = "prism", cfg: PrismConfig = _DEF,
           **kw):
     """(A^{1/2}, A^{-1/2}) for symmetric PSD A."""
     if method == "eigh":
-        w, V = jnp.linalg.eigh(A)
+        w, V = jnp.linalg.eigh(A.astype(jnp.float32))
         w = jnp.maximum(w, 0.0)
         s = jnp.sqrt(w)
         si = jnp.where(s > 0, 1.0 / jnp.maximum(s, 1e-30), 0.0)
         Vt = jnp.swapaxes(V, -1, -2)
-        return (V * s[..., None, :]) @ Vt, (V * si[..., None, :]) @ Vt
+        return ((V * s[..., None, :]) @ Vt).astype(A.dtype), \
+            ((V * si[..., None, :]) @ Vt).astype(A.dtype)
     if method == "polar_express":
+        kw.setdefault("dtype", cfg.dtype)
         return _pe.sqrtm(A, iters=iters or 8, **kw)
     if method == "newton":
         return _newton.sqrtm(A, iters=iters or 12, method="prism", **kw)
@@ -74,9 +83,9 @@ def signm(A: jax.Array, method: str = "prism", cfg: PrismConfig = _DEF,
           **kw):
     """sign(A) for A with A^2 symmetric."""
     if method == "eigh":
-        w, V = jnp.linalg.eigh(A)
+        w, V = jnp.linalg.eigh(A.astype(jnp.float32))
         Vt = jnp.swapaxes(V, -1, -2)
-        return (V * jnp.sign(w)[..., None, :]) @ Vt
+        return ((V * jnp.sign(w)[..., None, :]) @ Vt).astype(A.dtype)
     return _ns.signm(A, cfg=cfg, method=method, iters=iters, key=key, **kw)
 
 
@@ -84,8 +93,10 @@ def inv(A: jax.Array, method: str = "prism_chebyshev",
         iters: Optional[int] = None, key: Optional[jax.Array] = None, **kw):
     """A^{-1} for full-rank square A."""
     if method == "solve":
-        eye = jnp.broadcast_to(jnp.eye(A.shape[-1], dtype=A.dtype), A.shape)
-        return jnp.linalg.solve(A, eye)
+        A32 = A.astype(jnp.float32)
+        eye = jnp.broadcast_to(jnp.eye(A.shape[-1], dtype=jnp.float32),
+                               A.shape)
+        return jnp.linalg.solve(A32, eye).astype(A.dtype)
     if method == "inverse_newton":
         return _invnewton.inv_proot(A, p=1, iters=iters or 20, key=key, **kw)
     m = "prism" if method == "prism_chebyshev" else "chebyshev"
@@ -99,10 +110,10 @@ def inv_proot(A: jax.Array, p: int, method: str = "prism",
               **kw):
     """A^{-1/p} for SPD A."""
     if method == "eigh":
-        w, V = jnp.linalg.eigh(A)
+        w, V = jnp.linalg.eigh(A.astype(jnp.float32))
         w = jnp.maximum(w, 1e-30)
         Vt = jnp.swapaxes(V, -1, -2)
-        return (V * (w ** (-1.0 / p))[..., None, :]) @ Vt
+        return ((V * (w ** (-1.0 / p))[..., None, :]) @ Vt).astype(A.dtype)
     meth = "prism" if method == "prism" else "classical"
     return _invnewton.inv_proot(A, p=p, iters=iters or 20, method=meth,
                                 key=key, **kw)

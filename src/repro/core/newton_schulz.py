@@ -41,25 +41,39 @@ def _fro(M: jax.Array) -> jax.Array:
 
 
 def _mm(A, B, use_kernels=False, alpha=1.0, C=None, beta=0.0):
-    """alpha * A @ B (+ beta * C), optionally through the Pallas kernel."""
+    """alpha * A @ B (+ beta * C), optionally through the Pallas kernel.
+
+    The jnp path mirrors the kernels' accumulation semantics exactly
+    (DESIGN.md §9): the dot accumulates fp32 regardless of the operand
+    dtype, the epilogue runs on the fp32 accumulator, and only the final
+    result rounds back to the compute dtype — bit-matching ref.matmul_add.
+    """
     if use_kernels:
         from repro.kernels import ops as kops
 
         return kops.matmul_add(A, B, C=C, alpha=alpha, beta=beta)
-    out = alpha * (A @ B)
+    out = jnp.matmul(A, B, preferred_element_type=jnp.float32)
+    if alpha != 1.0:
+        out = alpha * out
     if C is not None:
-        out = out + beta * C
-    return out
+        out = out + beta * C.astype(jnp.float32)
+    return out.astype(A.dtype)
 
 
 def _gram_residual(X: jax.Array, use_kernels: bool) -> jax.Array:
-    """R = I - X^T X (symmetric; Pallas syrk kernel when enabled)."""
+    """R = I - X^T X (symmetric; Pallas syrk kernel when enabled).
+
+    jnp path: fp32-accumulated Gram + fp32 epilogue, rounded once to the
+    compute dtype (matches ref.gram / the kernel, DESIGN.md §9).
+    """
     if use_kernels:
         from repro.kernels import ops as kops
 
         return kops.gram(X, alpha=1.0, beta=-1.0)
     Xt = jnp.swapaxes(X, -1, -2)
-    return _eye_like(X[..., :1, :]) - Xt @ X
+    G = jnp.matmul(Xt, X, preferred_element_type=jnp.float32)
+    eye = jnp.eye(X.shape[-1], dtype=jnp.float32)
+    return (eye - G).astype(X.dtype)
 
 
 def apply_g(X: jax.Array, R: jax.Array, alpha, d: int,

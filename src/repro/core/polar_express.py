@@ -19,6 +19,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.newton_schulz import _mm  # fp32-accumulate (DESIGN.md §9)
+
 # Algorithm 1 of Amsel et al. (2025), sigma_min = 1e-3 variant.
 POLAR_EXPRESS_COEFFS: Tuple[Tuple[float, float, float], ...] = (
     (8.28721201814563, -23.595886519098837, 17.300387312530933),
@@ -52,12 +54,12 @@ def polar(A: jax.Array, iters: int = 8, dtype=jnp.float32,
     fros = []
     for k in range(iters):
         a, b, c = _coeff(k)
-        M = jnp.swapaxes(X, -1, -2) @ X
+        M = _mm(jnp.swapaxes(X, -1, -2), X)
         if return_info:
             eye = jnp.eye(M.shape[-1], dtype=M.dtype)
             fros.append(_fro(eye - M)[..., 0, 0])
-        M2 = M @ M
-        X = a * X + b * (X @ M) + c * (X @ M2)
+        M2 = _mm(M, M)
+        X = a * X + b * _mm(X, M) + c * _mm(X, M2)
     X = jnp.swapaxes(X, -1, -2) if transpose else X
     X = X.astype(in_dtype)
     if return_info:
@@ -81,15 +83,15 @@ def sqrtm(A: jax.Array, iters: int = 8, dtype=jnp.float32,
     fros = []
     for k in range(iters):
         a, b, c = _coeff(k)
-        M = Y @ X
+        M = _mm(Y, X)
         if return_info:
             eye = jnp.eye(M.shape[-1], dtype=M.dtype)
             fros.append(_fro(eye - M)[..., 0, 0])
-        M2 = M @ M
+        M2 = _mm(M, M)
         H = a * jnp.broadcast_to(jnp.eye(M.shape[-1], dtype=M.dtype), M.shape) \
             + b * M + c * M2
-        X = X @ H
-        Y = H @ Y
+        X = _mm(X, H)
+        Y = _mm(H, Y)
     sc = jnp.sqrt(c0)
     out = (X * sc).astype(in_dtype), (Y / sc).astype(in_dtype)
     if return_info:

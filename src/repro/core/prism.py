@@ -55,6 +55,15 @@ def fit_alpha(
     """
     n = R.shape[-1]
     max_pow = poly.max_trace_power(apoly)
+    # Precision (DESIGN.md §9): the sketch S lives in the COMPUTE dtype of
+    # R (its products are chain GEMMs), but everything downstream of the
+    # trace accumulators — t, the pad-trace correction c, the W map, the
+    # closed-form minimization — is pinned fp32 (MatfnPrecision.fit).  In
+    # particular c must be reduced in fp32 from the same (possibly
+    # bf16-rounded) S values the chain consumed: the pad block of R is
+    # exactly I in any dtype, so the fp32-accumulated trace picks up
+    # exactly the fp32 sum of squared pad columns, and the correction
+    # stays exact under bf16 compute.
     if key is None or sketch_dim == 0:
         t = sk.exact_power_traces(R, max_pow)
         if n_real is not None:

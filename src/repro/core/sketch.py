@@ -46,14 +46,20 @@ def sketched_power_traces(R: jax.Array, S: jax.Array, max_power: int,
         from repro.kernels import ops as kops
 
         return kops.sketch_traces(R, S, max_power)
+    # Accumulation semantics match the fused chain kernel (DESIGN.md §9):
+    # each product R @ V accumulates fp32, the trace epilogue reduces the
+    # fp32 accumulator (NOT the rounded V'), and only the V that feeds the
+    # next power rounds back to the compute dtype.
     St = S.T.astype(R.dtype)  # [n, p]
+    St32 = St.astype(jnp.float32)
     V = jnp.broadcast_to(St, R.shape[:-2] + St.shape)
-    traces = [jnp.sum(St * St, dtype=jnp.float32)
+    traces = [jnp.sum(St32 * St32)
               * jnp.ones(R.shape[:-2], dtype=jnp.float32)]
     for _ in range(max_power):
-        V = R @ V
+        Vacc = jnp.matmul(R, V, preferred_element_type=jnp.float32)
         # tr(S R^i S^T) = sum_{jk} S^T[j,k] * (R^i S^T)[j,k]
-        traces.append(jnp.sum(St * V, axis=(-2, -1), dtype=jnp.float32))
+        traces.append(jnp.sum(St32 * Vacc, axis=(-2, -1)))
+        V = Vacc.astype(R.dtype)
     return jnp.stack(traces, axis=-1)
 
 
@@ -67,6 +73,9 @@ def exact_power_traces(R: jax.Array, max_power: int) -> jax.Array:
     P = jnp.broadcast_to(eye, R.shape)
     traces = [jnp.asarray(n, jnp.float32) * jnp.ones(R.shape[:-2], jnp.float32)]
     for _ in range(max_power):
-        P = R @ P
-        traces.append(jnp.trace(P, axis1=-2, axis2=-1).astype(jnp.float32))
+        # fp32 accumulation + fp32 trace epilogue, powers rounded to the
+        # compute dtype between steps (same policy as the sketched chain)
+        Pacc = jnp.matmul(R, P, preferred_element_type=jnp.float32)
+        traces.append(jnp.trace(Pacc, axis1=-2, axis2=-1))
+        P = Pacc.astype(R.dtype)
     return jnp.stack(traces, axis=-1)

@@ -12,6 +12,11 @@ The kernel emits the upper-block-triangle U (lower blocks zero);
 ``ops.gram`` mirrors it with one elementwise pass:
     R = U + transpose(strictly-upper-block part of U).
 
+Precision (DESIGN.md §9): bf16 X accumulates X^T X in fp32 on the VMEM
+scratch; the alpha*I epilogue is fp32 and the tile rounds once to the
+operand dtype — the residual a bf16 Newton-Schulz iteration consumes is
+the correctly-rounded fp32 Gram, not a bf16-accumulated one.
+
 Batching: the grid is (B, T, K/bk) so a whole [B, m, n] parameter bucket
 forms its residuals in ONE launch (DESIGN.md §7); 2-D inputs run as B = 1.
 """

@@ -11,6 +11,12 @@ accumulator; K is the innermost grid dimension, the C-epilogue and the
 output cast happen on the last K step.  Tile sizes are 128-aligned for the
 128x128 MXU systolic array.
 
+Precision (DESIGN.md §9): operands may be fp32 or bf16 — the dot always
+accumulates fp32 (``preferred_element_type``), the alpha/beta epilogue
+runs on the fp32 accumulator (C upcast per tile), and the output rounds
+once to the operand dtype.  ref.matmul_add is the bit-level oracle for
+both dtypes.
+
 Batching: the grid carries a leading batch dimension (B, M/bm, N/bn, K/bk)
 so a whole [B, m, n] parameter bucket runs in ONE kernel launch instead of
 a vmap of B independent 2-D launches (DESIGN.md §7).  2-D operands are

@@ -5,11 +5,20 @@ Dispatch policy:
   * on CPU (this container) ``interpret=True`` executes the kernel bodies
     in Python for correctness validation, or — when ``REPRO_KERNEL_MODE=ref``
     or the shapes are large — the pure-jnp oracle in ref.py is used so CPU
-    benchmarks aren't dominated by the interpreter.
+    benchmarks aren't dominated by the interpreter.  "Large" is a per-call
+    operand-size cutoff on the interpret path: any operand above
+    ``REPRO_INTERPRET_MAX_ELEMS`` elements (default 2**21; 0 disables the
+    cutoff) falls back to ref, so CPU kernel-validation runs don't crawl
+    through the Python interpreter on production-sized buckets.
 
 All wrappers accept leading batch dimensions, which are collapsed into the
 single batch-grid dimension of the kernels (DESIGN.md §7): a whole
 [B, m, n] parameter bucket is one launch, never a vmap of B 2-D launches.
+
+Precision (DESIGN.md §9): every kernel takes operands in the caller's
+compute dtype (fp32 or bf16) and accumulates fp32 on a VMEM scratch;
+trace epilogues stay fp32 end-to-end.  The ref.py oracles reproduce the
+same accumulation semantics, so dispatch mode never changes the contract.
 """
 from __future__ import annotations
 
@@ -24,13 +33,28 @@ from repro.kernels import ref as _ref
 from repro.kernels import sketch_traces as _sk
 
 _LANE = 128  # TPU lane width: sketch dim padded up to this
+_DEFAULT_INTERPRET_MAX_ELEMS = 1 << 21
 
 
-def _mode() -> str:
+def _interpret_cutoff() -> int:
+    """Max per-operand element count the interpret path accepts; larger
+    calls fall back to the ref oracle.  0 (or negative) disables the
+    cutoff — benchmarks set that while launch-COUNTING under interpret
+    mode, where kernels are only traced, never executed."""
+    return int(os.environ.get("REPRO_INTERPRET_MAX_ELEMS",
+                              _DEFAULT_INTERPRET_MAX_ELEMS))
+
+
+def _mode(*operands) -> str:
     env = os.environ.get("REPRO_KERNEL_MODE", "auto")
-    if env != "auto":
-        return env  # "ref" | "interpret" | "native"
-    return "native" if jax.default_backend() == "tpu" else "ref"
+    mode = env if env != "auto" else \
+        ("native" if jax.default_backend() == "tpu" else "ref")
+    if mode == "interpret":
+        cutoff = _interpret_cutoff()
+        if cutoff > 0 and any(a is not None and a.size > cutoff
+                              for a in operands):
+            return "ref"
+    return mode  # "ref" | "interpret" | "native"
 
 
 def _collapse(lead, *arrays):
@@ -52,7 +76,7 @@ def _collapse(lead, *arrays):
 def matmul_add(A, B, C=None, *, alpha: float = 1.0, beta: float = 0.0,
                bm: int = 256, bn: int = 256, bk: int = 256):
     """D = alpha * A @ B (+ beta * C), batched over leading dims."""
-    mode = _mode()
+    mode = _mode(A, B, C)
     if mode == "ref":
         return _ref.matmul_add(A, B, C, alpha=alpha, beta=beta)
     interp = mode == "interpret"
@@ -69,7 +93,7 @@ def matmul_add(A, B, C=None, *, alpha: float = 1.0, beta: float = 0.0,
 def gram(X, *, alpha: float = 1.0, beta: float = -1.0,
          bn: int = 256, bk: int = 256):
     """R = alpha * I + beta * X^T X (symmetric syrk), batched."""
-    mode = _mode()
+    mode = _mode(X)
     if mode == "ref":
         return _ref.gram(X, alpha=alpha, beta=beta)
     interp = mode == "interpret"
@@ -91,7 +115,7 @@ def sketch_traces(R, S, max_power: int, *, bn: int = 256):
     must coincide: V's row partition is reused as the contraction
     partition of the next power inside the single launch).
     """
-    mode = _mode()
+    mode = _mode(R)
     if mode == "ref":
         return _ref.sketch_traces(R, S, max_power)
     interp = mode == "interpret"

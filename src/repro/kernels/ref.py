@@ -3,6 +3,13 @@
 Each function is the mathematical definition with no tiling — used by the
 per-kernel allclose sweeps in tests/test_kernels.py and as the CPU
 fallback path inside ops.py.
+
+Accumulation semantics (DESIGN.md §9): the oracles reproduce the kernels'
+mixed-precision contract exactly — dots accumulate fp32 regardless of the
+operand dtype (``preferred_element_type``), epilogues (C-add, alpha*I,
+trace reductions) run on the fp32 accumulator, and only the tensor that
+leaves the kernel rounds back to the operand dtype.  For fp32 operands
+this is the plain definition; for bf16 operands it is what the MXU does.
 """
 from __future__ import annotations
 
@@ -28,12 +35,19 @@ def gram(X, *, alpha=1.0, beta=-1.0):
 
 
 def sketch_traces(R, S, max_power: int):
-    """t_i = tr(S R^i S^T), i = 0..max_power (fp32)."""
+    """t_i = tr(S R^i S^T), i = 0..max_power (fp32).
+
+    Trace epilogues reduce St (fp32-cast) against the fp32 ACCUMULATOR of
+    R @ V — not the rounded V' — matching sketch_traces.py, where the
+    reduction happens while the fp32 tile is still in VMEM; V' then
+    rounds to the compute dtype before feeding the next power.
+    """
     St = S.T.astype(R.dtype)
+    St32 = St.astype(jnp.float32)
     V = jnp.broadcast_to(St, R.shape[:-2] + St.shape)
-    traces = [jnp.sum(St * St, dtype=jnp.float32)
-              * jnp.ones(R.shape[:-2], jnp.float32)]
+    traces = [jnp.sum(St32 * St32) * jnp.ones(R.shape[:-2], jnp.float32)]
     for _ in range(max_power):
-        V = jnp.matmul(R, V, preferred_element_type=jnp.float32).astype(R.dtype)
-        traces.append(jnp.sum(St * V, axis=(-2, -1), dtype=jnp.float32))
+        Vacc = jnp.matmul(R, V, preferred_element_type=jnp.float32)
+        traces.append(jnp.sum(St32 * Vacc, axis=(-2, -1)))
+        V = Vacc.astype(R.dtype)
     return jnp.stack(traces, axis=-1)

@@ -11,6 +11,12 @@ kernels fuse each chain step with its trace epilogue:
 saving one full HBM round-trip of V' per power (the trace is reduced from
 the fp32 accumulator while the tile is still in VMEM).
 
+Precision (DESIGN.md §9): with bf16 R/St the chain stays bf16 in VMEM
+(the ping-pong V buffers take R.dtype) but every trace is reduced in
+fp32 FROM THE fp32 ACCUMULATOR of R @ V — before V' rounds to bf16 —
+so the PRISM fit always sees fp32 traces; ref.sketch_traces mirrors
+this ordering exactly.
+
 Two entry points:
 
   * ``sketch_step`` — one chain step, grid (row-tiles, k-tiles); the

@@ -236,6 +236,10 @@ def precond_cache_sharding(mesh: Mesh, shape: Tuple[int, ...]):
     refresh step's all-gathered bucket scatters straight into the shards.
     constrain_spec drops axes from dims they don't divide, so any shape
     stays legal on any mesh.
+
+    The spec is dtype-independent: bf16 cache storage
+    (OptimizerConfig.precond_cache_dtype, DESIGN.md §9) halves the bytes
+    under the SAME partitioning — the two savings compose.
     """
     entries: list = [None] * len(shape)
     if len(shape) >= 3 and "model" in mesh.axis_names:

@@ -127,12 +127,23 @@ def plan_buckets(shapes: Sequence[Tuple[int, ...]], *, pad: bool = False,
     return tuple(buckets)
 
 
-def gather_bucket(bucket: Bucket, views: Sequence[jax.Array]) -> jax.Array:
-    """Stack a bucket's views into one [B, M, N] array (zero-padded)."""
+def gather_bucket(bucket: Bucket, views: Sequence[jax.Array],
+                  dtype=None) -> jax.Array:
+    """Stack a bucket's views into one [B, M, N] array (zero-padded).
+
+    ``dtype`` casts each view BEFORE stacking (DESIGN.md §9): under a
+    bf16 compute policy the gathered bucket — the array every chain GEMM
+    streams from HBM — is materialized directly in bf16, halving the
+    gather/concat footprint instead of stacking fp32 and casting inside
+    the matfn call.  Zero padding is exact in any dtype.
+    """
     M, N = bucket.shape
     parts = []
     for e in bucket.entries:
-        v = views[e.index].reshape((e.count,) + e.mshape)
+        v = views[e.index]
+        if dtype is not None and v.dtype != dtype:
+            v = v.astype(dtype)
+        v = v.reshape((e.count,) + e.mshape)
         pm, pn = M - e.mshape[0], N - e.mshape[1]
         if pm or pn:
             v = jnp.pad(v, ((0, 0), (0, pm), (0, pn)))
@@ -235,15 +246,23 @@ def shard_over_batch(fn: Callable, mesh, axes: Tuple[str, ...],
 
 def polar_bucketed(views: Sequence[jax.Array], cfg: OptimizerConfig,
                    key: Optional[jax.Array]) -> List[jax.Array]:
-    """Polar factor of every matrix view via one batched call per bucket."""
+    """Polar factor of every matrix view via one batched call per bucket.
+
+    Buckets gather directly in the engine's compute dtype
+    (``cfg.matfn_dtype`` via the resolved MatfnPrecision policy) — the
+    SVD method excepted, whose LAPACK path is pinned fp32 (DESIGN.md §9).
+    """
     method = cfg.matfn_method
+    pcfg = cfg.resolved_prism
+    compute = None if method == "svd" else \
+        cfg.matfn_precision.compute_dtype
     pad = cfg.bucket_pad and method != "svd"
     buckets = plan_buckets([v.shape for v in views], pad=pad,
                            pad_slack=cfg.bucket_pad_slack)
     mesh, mesh_axes = mesh_batch_axes(cfg)
     outs: List[Optional[jax.Array]] = [None] * len(views)
     for bi, b in enumerate(buckets):
-        stacked = gather_bucket(b, views)
+        stacked = gather_bucket(b, views, dtype=compute)
         local_reshard = (cfg.muon_local_reshard
                          and all(e.lead for e in b.entries))
         if local_reshard:
@@ -265,7 +284,7 @@ def polar_bucketed(views: Sequence[jax.Array], cfg: OptimizerConfig,
             if method == "svd":
                 return matfn.polar(x, method="svd")
             kw = {"n_real": nr[0]} if nr else {}
-            return matfn.polar(x, method=method, cfg=cfg.prism, key=_kk,
+            return matfn.polar(x, method=method, cfg=pcfg, key=_kk,
                                **kw)
 
         if mesh is not None and not local_reshard:
@@ -287,7 +306,9 @@ def transform_bucketed(mats: Sequence[jax.Array], fn,
     bucket and scatter the [B, n, n] results back.
 
     The generic engine for matrix functions without a pad-exactness story
-    (Shampoo inverse roots).  With a ``cfg`` and an active sharding
+    (Shampoo inverse roots).  Gathers stay fp32 here: the stacked arrays
+    are fp32 EMA Kronecker factors whose eps-ridge must be applied in
+    fp32 before the chain casts down (DESIGN.md §9) — fn owns the cast.  With a ``cfg`` and an active sharding
     context the batch dim shard_maps over the mesh like
     ``polar_bucketed`` (identity pad slices are SPD, so the Shampoo
     inverse-root chains on them stay finite) — fn's ``stacked`` argument

@@ -25,6 +25,13 @@ in the state, refreshed when count % K == 0 (exact at step 0) and reused
 ``refresh`` argument of ``update`` overrides the schedule statically: a
 Python bool picks the branch at trace time, so a skip step compiles with
 zero matrix-function work (the launch-count contract of DESIGN.md §8).
+
+Precision (DESIGN.md §9): ``cfg.matfn_dtype`` sets the compute dtype of
+the whole orthogonalization path (bucket gathers stack directly in bf16);
+``cfg.cache_dtype`` sets the storage dtype of the "ortho" cache — every
+step (refresh or stale) applies the cache-dtype polar, so the update
+direction is schedule-invariant.  Momentum and the applied parameter
+delta stay fp32.
 """
 from __future__ import annotations
 
@@ -57,10 +64,13 @@ def make_muon(cfg: OptimizerConfig, axes_tree) -> base.Optimizer:
                 s = {"mom": mom}
                 if cfg.precond_every > 1:
                     # staleness cache: the orthogonalized momentum VIEW
-                    # (possibly transposed/flattened vs the param layout)
+                    # (possibly transposed/flattened vs the param layout);
+                    # stored in cfg.cache_dtype — bf16 halves cached
+                    # optimizer state, sharding rules unchanged (§9)
                     M, _ = base.to_matrix_view(
                         jnp.zeros(p.shape, jnp.float32), a)
-                    s["ortho"] = jnp.zeros(M.shape, jnp.float32)
+                    s["ortho"] = jnp.zeros(M.shape,
+                                           jnp.dtype(cfg.cache_dtype))
                 state.append(s)
             else:
                 state.append({"mom": mom,
@@ -86,7 +96,7 @@ def make_muon(cfg: OptimizerConfig, axes_tree) -> base.Optimizer:
                 outs.append(matfn.polar(M, method="svd"))
             else:
                 outs.append(matfn.polar(M, method=cfg.matfn_method,
-                                        cfg=cfg.prism, key=kk))
+                                        cfg=cfg.resolved_prism, key=kk))
         return outs
 
     def update(grads, state, params, step, key, refresh=None):
@@ -137,12 +147,20 @@ def make_muon(cfg: OptimizerConfig, axes_tree) -> base.Optimizer:
             return _polar_per_leaf(views, leaf_idx, key)
 
         if cfg.precond_every > 1 and views:
+            cache_dt = jnp.dtype(cfg.cache_dtype)
             cached = [flat_s[i]["ortho"] for i in leaf_idx]
+
+            def compute_cached():
+                # round to the cache dtype up front: both lax.cond
+                # branches carry the same dtype, and refresh vs stale
+                # steps apply identical (cache-rounded) polars
+                return [O.astype(cache_dt) for O in compute_polars()]
+
             if isinstance(refresh, bool):  # static: picked at trace time
-                polars = compute_polars() if refresh else cached
+                polars = compute_cached() if refresh else cached
             else:
                 do = (state["count"] % cfg.precond_every) == 0
-                polars = jax.lax.cond(do, compute_polars,
+                polars = jax.lax.cond(do, compute_cached,
                                       lambda: list(cached))
             for O, i in zip(polars, leaf_idx):
                 new_s[i]["ortho"] = O

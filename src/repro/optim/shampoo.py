@@ -24,6 +24,13 @@ the former is the unified staleness knob shared with Muon, the latter
 the legacy Shampoo-only one.  ``update(..., refresh=<bool>)`` overrides
 the schedule statically: the skip branch then compiles with zero
 inverse-root work instead of a runtime lax.cond.
+
+Precision (DESIGN.md §9): the EMA Kronecker factors L/R and their
+eps-ridge stay fp32 (they are long-lived accumulators); the inverse-root
+CHAINS run at ``cfg.matfn_dtype`` compute with fp32 accumulation, and
+the cached "Linv"/"Rinv" store in ``cfg.cache_dtype`` — bf16 halves the
+cached inverse-root state; preconditioning promotes back to fp32 when
+the bf16 inverse multiplies the fp32 gradient.
 """
 from __future__ import annotations
 
@@ -37,24 +44,28 @@ from repro.optim.muon import _flatten_with_axes
 
 
 def _inv_root(A, p, cfg: OptimizerConfig, key):
+    # the eps-ridge is applied to the fp32 EMA factor BEFORE any cast:
+    # a bf16 ridge would round away eps against trace-scale entries (§9)
     eps = cfg.shampoo_eps
     n = A.shape[-1]
     Ad = A + eps * jnp.trace(A, axis1=-2, axis2=-1)[..., None, None] \
         * jnp.eye(n, dtype=A.dtype) / n + eps * jnp.eye(n, dtype=A.dtype)
+    pc = cfg.resolved_prism
     m = cfg.matfn_method
     if m == "eigh":
         return matfn.inv_proot(Ad, p=p, method="eigh")
     if m == "polar_express" and p == 2:
         return matfn.sqrtm(Ad, method="polar_express",
-                           iters=cfg.prism.iterations)[1]
+                           iters=pc.iterations, dtype=pc.dtype)[1]
     if m == "newton" and p == 2:
+        # DB-Newton is Cholesky-based: pinned fp32 (DESIGN.md §9)
         return matfn.sqrtm(Ad, method="newton",
-                           iters=cfg.prism.iterations)[1]
+                           iters=pc.iterations)[1]
     if p == 2:
-        return matfn.sqrtm(Ad, method="prism", cfg=cfg.prism, key=key,
-                           iters=cfg.prism.iterations)[1]
+        return matfn.sqrtm(Ad, method="prism", cfg=pc, key=key,
+                           iters=pc.iterations)[1]
     return matfn.inv_proot(Ad, p=p, method="prism", key=key,
-                           iters=cfg.prism.iterations)
+                           iters=pc.iterations, dtype=jnp.dtype(pc.dtype))
 
 
 def make_shampoo(cfg: OptimizerConfig, axes_tree,
@@ -72,14 +83,15 @@ def make_shampoo(cfg: OptimizerConfig, axes_tree,
                 m, n = M.shape[-2], M.shape[-1]
                 lead = M.shape[:-2]
                 s = {"mom": mom}
+                cache_dt = jnp.dtype(cfg.cache_dtype)
                 if m <= maxd:
                     s["L"] = jnp.zeros(lead + (m, m), jnp.float32)
-                    s["Linv"] = jnp.zeros(lead + (m, m), jnp.float32)
+                    s["Linv"] = jnp.zeros(lead + (m, m), cache_dt)
                 else:
                     s["diagL"] = jnp.zeros(lead + (m,), jnp.float32)
                 if n <= maxd:
                     s["R"] = jnp.zeros(lead + (n, n), jnp.float32)
-                    s["Rinv"] = jnp.zeros(lead + (n, n), jnp.float32)
+                    s["Rinv"] = jnp.zeros(lead + (n, n), cache_dt)
                 else:
                     s["diagR"] = jnp.zeros(lead + (n,), jnp.float32)
                 state.append(s)
@@ -95,11 +107,15 @@ def make_shampoo(cfg: OptimizerConfig, axes_tree,
         recomputes move zero preconditioner bytes (no gather/scatter).
         A static (Python bool) ``recompute`` picks the branch at trace
         time instead — the skip variant contains no inverse-root ops."""
+        cache_dt = jnp.dtype(cfg.cache_dtype)
+
         def compute():
             def one_bucket(stacked, b, bi):
                 kk = (jax.random.fold_in(key, bi)
                       if key is not None else None)
-                return _inv_root(stacked, p_root, cfg, kk)
+                # cast INSIDE the per-bucket fn so lax.cond branches and
+                # the sharded all-gather both carry the cache dtype
+                return _inv_root(stacked, p_root, cfg, kk).astype(cache_dt)
 
             return bucketing.transform_bucketed(mats, one_bucket, cfg)
 
@@ -108,15 +124,17 @@ def make_shampoo(cfg: OptimizerConfig, axes_tree,
         return jax.lax.cond(recompute, compute, lambda: list(prevs))
 
     def _inv_roots_per_leaf(mats, prevs, recompute, keys):
+        cache_dt = jnp.dtype(cfg.cache_dtype)
         if isinstance(recompute, bool):
-            return ([_inv_root(A, p_root, cfg, kk)
+            return ([_inv_root(A, p_root, cfg, kk).astype(cache_dt)
                      for A, kk in zip(mats, keys)] if recompute
                     else list(prevs))
         outs = []
         for A, prev, kk in zip(mats, prevs, keys):
             outs.append(jax.lax.cond(
                 recompute,
-                lambda A=A, kk=kk: _inv_root(A, p_root, cfg, kk),
+                lambda A=A, kk=kk: _inv_root(A, p_root, cfg,
+                                             kk).astype(cache_dt),
                 lambda prev=prev: prev))
         return outs
 

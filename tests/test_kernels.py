@@ -160,6 +160,123 @@ def test_sketch_chain_bf16(key):
     np.testing.assert_allclose(np.asarray(got), want, rtol=5e-2, atol=5e-2)
 
 
+# ----------------------------------------------------- randomized fuzz sweep
+
+# deterministic fuzz corpus: non-divisible (B, m, k, n) drawn once at
+# import so every CI run sweeps the same shapes (rerunnable failures)
+_FUZZ_RNG = np.random.default_rng(0)
+FUZZ_SHAPES = [tuple(int(x) for x in (_FUZZ_RNG.integers(1, 4),
+                                      _FUZZ_RNG.integers(1, 100),
+                                      _FUZZ_RNG.integers(1, 100),
+                                      _FUZZ_RNG.integers(1, 100)))
+               for _ in range(6)]
+
+
+@pytest.mark.parametrize("B,m,k,n", FUZZ_SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_fuzz_matmul_add(key, B, m, k, n, dtype):
+    """Interpret-mode kernel == oracle on random non-divisible shapes for
+    both fp32 and bf16-in/fp32-accum operands."""
+    ka, kb, kc = jax.random.split(key, 3)
+    A = jax.random.normal(ka, (B, m, k), jnp.float32).astype(dtype)
+    Bm = jax.random.normal(kb, (B, k, n), jnp.float32).astype(dtype)
+    C = jax.random.normal(kc, (B, m, n), jnp.float32).astype(dtype)
+    got = mma_kernel.matmul_add(A, Bm, C, alpha=0.5, beta=1.25,
+                                bm=32, bn=32, bk=32, interpret=True)
+    want = ref.matmul_add(A, Bm, C, alpha=0.5, beta=1.25)
+    np.testing.assert_allclose(got.astype(jnp.float32),
+                               want.astype(jnp.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("B,m,k,n", FUZZ_SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_fuzz_gram(key, B, m, k, n, dtype):
+    del n  # gram consumes (B, m, k) -> [B, k, k]
+    X = jax.random.normal(key, (B, m, k), jnp.float32).astype(dtype)
+    U = gram_kernel.gram_upper(X, alpha=1.0, beta=-1.0, bn=32, bk=32,
+                               interpret=True)
+    got = gram_kernel.mirror_upper(U, min(32, k))
+    want = ref.gram(X, alpha=1.0, beta=-1.0)
+    np.testing.assert_allclose(got.astype(jnp.float32),
+                               want.astype(jnp.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("B,m,k,n", FUZZ_SHAPES[:3])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_fuzz_sketch_chain(key, B, m, k, n, dtype):
+    del m  # the chain consumes a symmetric [B, k, k] residual
+    kr, ks = jax.random.split(key)
+    R = jax.random.normal(kr, (B, k, k)) / (2 * np.sqrt(max(k, 1)))
+    R = (0.5 * (R + jnp.swapaxes(R, -1, -2))).astype(dtype)
+    p = 1 + n % 8
+    S = (jax.random.normal(ks, (p, k)) / np.sqrt(p)).astype(dtype)
+    St = jnp.pad(S.T, ((0, 0), (0, (-p) % 128)))
+    got = sk_kernel.sketch_chain(R, St, 5, bn=32, interpret=True)
+    want = np.asarray(ref.sketch_traces(R, S, 5))[:, 1:]
+    tol = 5e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(got), want, rtol=tol, atol=tol)
+
+
+def test_fuzz_launch_count_dtype_parity(monkeypatch, key):
+    """Contract: the bf16 path issues exactly the launches the fp32 path
+    does on every fuzz shape — precision never changes dispatch."""
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "interpret")
+    from repro.kernels import ops
+
+    for B, m, k, n in FUZZ_SHAPES:
+        counts = {}
+        for dtype in DTYPES:
+            A = jnp.zeros((B, m, k), dtype)
+            Bm = jnp.zeros((B, k, n), dtype)
+            X = jnp.zeros((B, m, k), dtype)
+            counts[dtype] = ops.count_launches(
+                lambda A, Bm, X: (ops.matmul_add(A, Bm),
+                                  ops.gram(X)), A, Bm, X)
+        assert counts[jnp.float32] == counts[jnp.bfloat16] == 2, \
+            ((B, m, k, n), counts)
+
+
+# ------------------------------------------------- interpret-mode size cutoff
+
+def test_interpret_cutoff_falls_back_to_ref(monkeypatch, key):
+    """ops._mode honors REPRO_INTERPRET_MAX_ELEMS: oversized operands
+    fall back to the jnp oracle (0 launches) so CPU validation runs don't
+    crawl; small ones still execute the kernel body; 0 disables."""
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "interpret")
+    from repro.kernels import ops
+
+    A = jax.random.normal(key, (64, 64))
+    B = jax.random.normal(jax.random.fold_in(key, 1), (64, 64))
+
+    monkeypatch.setenv("REPRO_INTERPRET_MAX_ELEMS", "1000")  # 4096 > 1000
+    assert ops.count_launches(lambda a, b: ops.matmul_add(a, b), A, B) == 0
+    got = ops.matmul_add(A, B)  # numerics identical through the fallback
+    np.testing.assert_allclose(got, ref.matmul_add(A, B), rtol=2e-5,
+                               atol=2e-5)
+
+    monkeypatch.setenv("REPRO_INTERPRET_MAX_ELEMS", "100000")
+    assert ops.count_launches(lambda a, b: ops.matmul_add(a, b), A, B) == 1
+
+    monkeypatch.setenv("REPRO_INTERPRET_MAX_ELEMS", "0")  # disabled
+    assert ops.count_launches(lambda a, b: ops.matmul_add(a, b), A, B) == 1
+
+    monkeypatch.delenv("REPRO_INTERPRET_MAX_ELEMS")
+    assert ops._interpret_cutoff() == ops._DEFAULT_INTERPRET_MAX_ELEMS
+
+
+def test_interpret_cutoff_only_affects_interpret_mode(monkeypatch, key):
+    """ref/native dispatch ignores the cutoff (it guards only the Python
+    interpreter path)."""
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "ref")
+    monkeypatch.setenv("REPRO_INTERPRET_MAX_ELEMS", "1")
+    from repro.kernels import ops
+
+    A = jax.random.normal(key, (32, 16))
+    B = jax.random.normal(jax.random.fold_in(key, 1), (16, 8))
+    np.testing.assert_allclose(ops.matmul_add(A, B), A @ B, rtol=2e-5,
+                               atol=2e-5)
+
+
 def test_ops_dispatch_ref_on_cpu(key):
     """ops.py must fall back to the jnp oracle on CPU by default."""
     from repro.kernels import ops

@@ -99,6 +99,70 @@ SHARDED_SCRIPT = textwrap.dedent("""
         np.testing.assert_allclose(np.asarray(sp_ref[k]),
                                    np.asarray(sp_sh[k]),
                                    rtol=2e-5, atol=2e-5)
+
+    # mixed-precision engine on the sharded path (DESIGN.md §9): batch-dim
+    # sharding is per-slice math in ANY dtype, so the bf16 policy keeps
+    # sharded == replicated — same uneven-B bucket zoo, identity-slice
+    # padding now in bf16.  Tolerance is a few bf16 ulps (2^-8), NOT
+    # fp32-tight: jit-vs-eager fusion boundaries can move the fp32->bf16
+    # rounding point, and the contractive chains keep such one-ulp
+    # perturbations from growing.
+    cfg16 = OptimizerConfig(prism=PrismConfig(degree=2, iterations=6,
+                                              warm_alpha_iters=1,
+                                              sketch_dim=8),
+                            matfn_dtype="bfloat16", bucket_pad=True)
+    ref16 = bucketing.polar_bucketed(views, cfg16, key)
+    assert all(o.dtype == jnp.bfloat16 for o in ref16)
+    with mesh, activation_sharding(
+            mesh, {"opt_layers": "model", "opt_rows": "data"}):
+        out16 = jax.jit(
+            lambda vs: bucketing.polar_bucketed(vs, cfg16, key))(views)
+    for r, o in zip(ref16, out16):
+        np.testing.assert_allclose(np.asarray(r, np.float32),
+                                   np.asarray(o, np.float32),
+                                   rtol=0.05, atol=1.5 * 2.0 ** -8)
+
+    # full Muon + Shampoo steps under the bf16 policy, sharded vs
+    # replicated (bf16 staleness-cache state included via precond_every),
+    # compared norm-level on the applied UPDATE — per-element checks are
+    # brittle where grafting/aspect scaling amplifies one-ulp bf16 chain
+    # divergence on isolated entries.  Muon runs the original mixed tree
+    # (polar is well-conditioned: bf16-ulp-level parity).  Shampoo's
+    # leaves get a controlled full-rank gradient spectrum instead: the
+    # inverse root of a step-0 EMA factor G G^T of a WIDE G is rank-
+    # deficient (eps-ridge cond ~1e6), where the principled u*kappa bf16
+    # tolerance is vacuous — sharding of that case is already covered
+    # tightly by the fp32 parity above; precision is the only new
+    # variable here, tested where kappa keeps u*sqrt(kappa) meaningful.
+    from repro.core import random_matrices as rm
+    sq_sig = jnp.exp(jnp.linspace(jnp.log(0.3), 0.0, 48))
+    sq_params = {"a": views[4], "c": jnp.ones((64,))}
+    sq_axes = {"a": ("embed", "mlp"), "c": ("embed",)}
+    sq_grads = {"a": rm.with_spectrum(jax.random.fold_in(key, 5), 48, 48,
+                                      sq_sig),
+                "c": jnp.ones((64,))}
+    cases = (("muon", 0.05, params, axes_tree, grads, 2e-2),
+             ("shampoo", 1e-3, sq_params, sq_axes, sq_grads, 5e-2))
+    for name, lr, prms, axs, grds, tol in cases:
+        ocfg16 = OptimizerConfig(name=name, learning_rate=lr,
+                                 max_precond_dim=256,
+                                 matfn_dtype="bfloat16", precond_every=2,
+                                 prism=PrismConfig(degree=2, iterations=5,
+                                                   warm_alpha_iters=1,
+                                                   sketch_dim=8))
+        o16 = make_optimizer(ocfg16, axs)
+        q_ref, s_ref = jax.jit(o16.update)(grds, o16.init(prms), prms,
+                                           0, key)
+        with mesh, activation_sharding(
+                mesh, {"opt_layers": "model", "opt_rows": "data"}):
+            q_sh, s_sh = jax.jit(o16.update)(grds, o16.init(prms),
+                                             prms, 0, key)
+        for k in prms:
+            d_ref = np.asarray(q_ref[k], np.float32) - np.asarray(prms[k])
+            d_sh = np.asarray(q_sh[k], np.float32) - np.asarray(prms[k])
+            rel = np.linalg.norm(d_ref - d_sh) / max(
+                np.linalg.norm(d_ref), 1e-12)
+            assert rel < tol, (name, k, rel)
     print("SHARDED_PRECOND_OK")
 """)
 
