@@ -21,7 +21,11 @@ Reported per (n, B) cell:
   * Pallas launches per step for the kernel path (counted by tracing with
     REPRO_KERNEL_MODE=interpret and the interpret-size cutoff disabled —
     counting only traces): per-leaf scales as B * (2 + d), bucketed
-    stays constant at 2 + d, and the count is dtype-independent.
+    stays constant at 2 + d, and the count is dtype-independent,
+  * the §10 fused-iteration tier's contract (``launches_fused``: 1 launch
+    per warm tail + 2 per fitted iteration, dtype-blind) and its modeled
+    HBM bytes (``hbm_bytes_fused_*`` per fitted iteration,
+    ``hbm_bytes_warm_tail_*`` per whole tail) next to the §7 numbers.
 
 Writes the committed baseline BENCH_batched_matfn.json so later PRs have
 a perf trajectory.
@@ -51,14 +55,19 @@ OUT = os.path.join(os.path.dirname(os.path.dirname(__file__)),
 
 
 def _prism_cfg(n: int, use_kernels: bool = False,
-               dtype: str = "float32") -> PrismConfig:
+               dtype: str = "float32", fuse: str = "off") -> PrismConfig:
+    # the per-leaf/bucketed engines pin fuse="off" so their cells keep
+    # measuring the §7 batch-grid tier; the fused engine forces "on" so
+    # its cells document the §10 contract on every n (the auto tier's
+    # budget decision is recorded separately as fused_fits)
     return PrismConfig(degree=2, iterations=3 if n <= 256 else 2,
                        warm_alpha_iters=1, sketch_dim=8,
-                       use_kernels=use_kernels, dtype=dtype)
+                       use_kernels=use_kernels, dtype=dtype, fuse=fuse)
 
 
-def _engines(n: int, use_kernels: bool = False, dtype: str = "float32"):
-    cfg = _prism_cfg(n, use_kernels, dtype)
+def _engines(n: int, use_kernels: bool = False, dtype: str = "float32",
+             fuse: str = "off"):
+    cfg = _prism_cfg(n, use_kernels, dtype, fuse)
 
     def per_leaf(views, key):
         return [matfn.polar(v, method="prism", cfg=cfg,
@@ -75,7 +84,8 @@ def _engines(n: int, use_kernels: bool = False, dtype: str = "float32"):
 def hbm_bytes_per_iter(n: int, B: int, dtype: str, degree: int = 2,
                        sketch_pad: int = 128) -> int:
     """Modeled HBM bytes one fitted PRISM-NS iteration streams for a
-    [B, n, n] bucket in the given compute dtype (DESIGN.md §9).
+    [B, n, n] bucket in the given compute dtype (DESIGN.md §9), on the
+    §7 batch-grid tier.
 
     gram reads X once and writes R; the fused sketch chain re-reads R
     once per power (V stays in VMEM); each of the d Horner GEMMs reads
@@ -90,6 +100,28 @@ def hbm_bytes_per_iter(n: int, B: int, dtype: str, degree: int = 2,
     chain = max_power * mats + B * n * sketch_pad  # R per power + St once
     horner = degree * 4 * mats           # read acc, R, X; write acc
     return item * (gram + chain + horner)
+
+
+def hbm_bytes_per_iter_fused(n: int, B: int, dtype: str,
+                             sketch_pad: int = 128) -> int:
+    """Modeled HBM bytes one FITTED iteration streams on the fused tier
+    (DESIGN.md §10): launch 1 reads X and St and writes R (the chain's V
+    never leaves VMEM — R is formed and consumed in-launch, so the
+    max_power re-reads of the §7 model vanish); launch 2 reads X and R
+    and writes X.  Independent of degree (the Horner accumulator stays
+    in VMEM) and of max_power.
+    """
+    item = 2 if dtype == "bfloat16" else 4
+    mats = B * n * n
+    return item * (5 * mats + B * n * sketch_pad)
+
+
+def hbm_bytes_warm_tail(n: int, B: int, dtype: str) -> int:
+    """Modeled HBM bytes of an ENTIRE fused warm tail: one read + one
+    write of X, however many iterations it spans (§10).  The §7 tier
+    streams ~2(1+d) matrices per warm iteration instead."""
+    item = 2 if dtype == "bfloat16" else 4
+    return item * 2 * B * n * n
 
 
 def _count_launches(fn, views, key) -> int:
@@ -134,6 +166,15 @@ def run(write_json: bool = True):
                                        dtype="bfloat16")
                     cell["launches_bucketed_bf16"] = _count_launches(
                         bu16, views, key)
+                    # §10 fused tier: warm tail 1 launch + 2 per fitted
+                    # iteration, independent of B, d, max_power and dtype
+                    _, fu_k = _engines(n, use_kernels=True, fuse="on")
+                    cell["launches_fused"] = _count_launches(fu_k, views,
+                                                             key)
+                    _, fu16 = _engines(n, use_kernels=True,
+                                       dtype="bfloat16", fuse="on")
+                    cell["launches_fused_bf16"] = _count_launches(
+                        fu16, views, key)
                 finally:
                     for var, old in [("REPRO_KERNEL_MODE", prev),
                                      ("REPRO_INTERPRET_MAX_ELEMS",
@@ -170,11 +211,32 @@ def run(write_json: bool = True):
                 3)
             cell["hbm_bytes_fp32"] = hbm_bytes_per_iter(n, B, "float32")
             cell["hbm_bytes_bf16"] = hbm_bytes_per_iter(n, B, "bfloat16")
+            # §10 fused-tier modeled HBM: per fitted iteration and per
+            # whole warm tail, plus the auto tier's budget decision for
+            # this shape at the default REPRO_VMEM_BUDGET
+            from repro.kernels import ops as kops
+
+            cell["hbm_bytes_fused_fp32"] = hbm_bytes_per_iter_fused(
+                n, B, "float32")
+            cell["hbm_bytes_fused_bf16"] = hbm_bytes_per_iter_fused(
+                n, B, "bfloat16")
+            cell["hbm_bytes_warm_tail_fp32"] = hbm_bytes_warm_tail(
+                n, B, "float32")
+            cell["hbm_bytes_warm_tail_bf16"] = hbm_bytes_warm_tail(
+                n, B, "bfloat16")
+            # the auto tier's decision is dtype-dependent (bf16 halves
+            # the working set), so record both
+            cell["fused_fits_fp32"] = bool(kops.fused_fits((n, n),
+                                                           "float32"))
+            cell["fused_fits_bf16"] = bool(kops.fused_fits((n, n),
+                                                           "bfloat16"))
             results.append(cell)
             extra = ({"launches_per_leaf": cell["launches_per_leaf"],
                       "launches_bucketed": cell["launches_bucketed"],
                       "launches_bucketed_bf16":
-                          cell["launches_bucketed_bf16"]}
+                          cell["launches_bucketed_bf16"],
+                      "launches_fused": cell["launches_fused"],
+                      "launches_fused_bf16": cell["launches_fused_bf16"]}
                      if count_launches else {})
             emit(f"batched_matfn_n{n}_B{B}", 1e3 * cell["bucketed_ms"],
                  per_leaf_ms=cell["per_leaf_ms"],
@@ -202,6 +264,21 @@ def run(write_json: bool = True):
                "expected, not a regression); the accelerator claim is "
                "hbm_bytes_bf16 = hbm_bytes_fp32 / 2 at identical launch "
                "counts (launches_bucketed_bf16 == launches_bucketed).",
+               "fused axis (DESIGN.md §10): launches_fused traces the "
+               "fused-iteration tier (fuse='on'): 1 launch for the warm "
+               "tail + 2 per fitted iteration, vs warm*(1+d) + "
+               "fitted*(2+d) on the §7 tier — and dtype-blind "
+               "(launches_fused_bf16 == launches_fused).  "
+               "hbm_bytes_fused_* model one fitted iteration (5 matrices "
+               "+ the sketch vs 2 + (4d+2) + 4d on §7 — degree- and "
+               "max_power-independent because R and the Horner "
+               "accumulator never leave VMEM); hbm_bytes_warm_tail_* "
+               "model an ENTIRE warm tail (one read + one write of X).  "
+               "fused_fits_{fp32,bf16} record the auto tier's "
+               "trace-time decision for this n per compute dtype at the "
+               "default REPRO_VMEM_BUDGET (bf16 halves the working set, "
+               "so it can fuse where fp32 cannot); the launch counts "
+               "force fuse='on' so every cell documents the contract.",
            ],
            "results": results}
     if write_json:

@@ -91,6 +91,14 @@ class PrismConfig:
       dtype: COMPUTE dtype of the iteration (operands, iterates, sketch);
         accumulation and the alpha fit stay fp32 regardless — see
         ``precision`` / MatfnPrecision (DESIGN.md §9).
+      fuse: the single-launch fused-iteration kernel tier (DESIGN.md §10).
+        "auto" engages it per call when the iteration's whole working set
+        fits the VMEM budget (kernels/ops.py::fused_fits — a trace-time,
+        batch-size-independent shape test); "on"/"off" force it.  Only
+        meaningful with ``use_kernels``.
+      vmem_budget: VMEM budget in bytes for the fused tier (and the
+        sketch-chain size guard).  0 defers to ``REPRO_VMEM_BUDGET`` or
+        the built-in default (kernels/ops.py).
     """
 
     degree: int = 2
@@ -100,6 +108,13 @@ class PrismConfig:
     alpha_bounds: Optional[Tuple[float, float]] = None
     use_kernels: bool = False
     dtype: str = "float32"
+    fuse: str = "auto"
+    vmem_budget: int = 0
+
+    def __post_init__(self):
+        if self.fuse not in ("auto", "on", "off"):
+            raise ValueError(f"PrismConfig.fuse must be auto|on|off, "
+                             f"got {self.fuse!r}")
 
     @property
     def bounds(self) -> Tuple[float, float]:
@@ -235,6 +250,12 @@ class OptimizerConfig:
     # the PRISM fit stay fp32 regardless (MatfnPrecision pins them).
     # "float32" (default) defers to prism.dtype untouched.
     matfn_dtype: str = "float32"
+    # VMEM budget (bytes) for the fused single-launch iteration tier and
+    # the sketch-chain size guard (DESIGN.md §10).  0 defers to the
+    # REPRO_VMEM_BUDGET env var / built-in default; threads into
+    # resolved_prism so bucketing and the iteration families share one
+    # number.  The tier itself stays per-bucket automatic (prism.fuse).
+    vmem_budget: int = 0
     # dtype of the staleness caches carried in the optimizer state (Muon
     # "ortho", Shampoo "Linv"/"Rinv").  "auto" follows matfn_dtype —
     # bf16 halves cached optimizer state; sharding rules are unchanged
@@ -283,13 +304,16 @@ class OptimizerConfig:
 
     @property
     def resolved_prism(self) -> PrismConfig:
-        """PrismConfig with ``matfn_dtype`` threaded in as the compute
-        dtype.  The default matfn_dtype="float32" leaves an explicitly
+        """PrismConfig with ``matfn_dtype`` (and ``vmem_budget``) threaded
+        in.  The default matfn_dtype="float32" leaves an explicitly
         configured prism.dtype alone."""
-        if self.matfn_dtype == "float32" or \
-                self.matfn_dtype == self.prism.dtype:
-            return self.prism
-        return dataclasses.replace(self.prism, dtype=self.matfn_dtype)
+        out = self.prism
+        if self.matfn_dtype != "float32" and \
+                self.matfn_dtype != out.dtype:
+            out = dataclasses.replace(out, dtype=self.matfn_dtype)
+        if self.vmem_budget and self.vmem_budget != out.vmem_budget:
+            out = dataclasses.replace(out, vmem_budget=self.vmem_budget)
+        return out
 
     @property
     def matfn_precision(self) -> MatfnPrecision:

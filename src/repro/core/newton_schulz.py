@@ -12,10 +12,24 @@ the PRISM sketched fit (core/prism.py).
 All entry points broadcast over leading batch dims (stacked layer params)
 and are jit/vmap/grad-safe; iteration counts are static Python ints so warm
 iterations compile to zero fitting overhead.
+
+Phase structure (DESIGN.md §10): every chain is an explicit sequence of
+WARM phases — maximal runs of iterations whose alpha is a static Python
+float (the PRISM warm-start value u, or the classical Taylor coefficient,
+which makes a whole classical chain one phase) — and FIT iterations,
+whose alpha is the sketched argmin and therefore data-dependent.  With
+``use_kernels`` and the fused kernel tier engaged (``cfg.fuse``, chosen
+at trace time from the matrix shape against the VMEM budget), a warm
+phase runs as ONE multi-iteration Pallas launch with X ping-ponging in
+VMEM, and a fit iteration as TWO launches: fused residual+sketch-chain,
+then the fused d-GEMM Horner application — the closed-form alpha
+minimization runs between them in XLA, which is exactly why the fit
+phase cannot fuse across iterations (alpha_{k+1} needs the traces of
+R_{k+1}).
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +37,7 @@ import jax.numpy as jnp
 from repro.config import PrismConfig
 from repro.core import polynomials as poly
 from repro.core import prism
+from repro.core import sketch as sk
 
 
 class IterInfo(NamedTuple):
@@ -82,19 +97,26 @@ def apply_g(X: jax.Array, R: jax.Array, alpha, d: int,
 
     g_d(x; a) = f_{d-1}(x) + a x^d with f the Taylor series of (1-x)^{-1/2}.
     Evaluated as a chain of d GEMMs (Horner on R), never forming g(R).
+
+    alpha is applied IN fp32 (DESIGN.md §9): the PRISM fit is pinned
+    fp32, so under a bf16 compute policy the fitted alpha multiplies the
+    fp32-upcast X and the product rounds ONCE to the compute dtype —
+    never pre-rounding alpha itself to bf16 (which would throw away the
+    fit's precision before it reaches the update).  The fused kernel
+    tier (kernels/fused_iter.apply_g) and ref.apply_g keep the same
+    contract inside the fp32 Horner accumulator.
     """
     f = poly.taylor_inv_sqrt(d - 1)  # ascending, length d
-    alpha = jnp.asarray(alpha, X.dtype)
+    alpha = jnp.asarray(alpha, jnp.float32)
     if alpha.ndim:
         alpha = alpha[..., None, None]
+    acc = (alpha * X.astype(jnp.float32)).astype(X.dtype)
     if side == "right":
         # X (f0 I + f1 R + ... + a R^d) = f0 X + (f1 X + (... + a X R) R) R
-        acc = alpha * X
         for j in range(d - 1, 0, -1):
             acc = _mm(acc, R, use_kernels, C=X, beta=float(f[j]))
         return _mm(acc, R, use_kernels, C=X, beta=float(f[0]))
     else:
-        acc = alpha * X
         for j in range(d - 1, 0, -1):
             acc = _mm(R, acc, use_kernels, C=X, beta=float(f[j]))
         return _mm(R, acc, use_kernels, C=X, beta=float(f[0]))
@@ -115,6 +137,131 @@ def _resolve_alpha(k: int, R: jax.Array, cfg: PrismConfig, method: str,
     assert method == "prism"
     return prism.resolve_alpha(k, R, poly.newton_schulz_residual(cfg.degree),
                                cfg, key, n_real=n_real)
+
+
+# ---------------------------------------------------------------------------
+# Phase plan + fused-tier routing (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+def _static_alpha(k: int, cfg: PrismConfig, method: str) -> Optional[float]:
+    """alpha_k when it is a compile-time constant, else None (fit)."""
+    if method == "newton_schulz":
+        return _classical_alpha(cfg.degree)
+    # fail fast on unknown methods on BOTH tiers (the unfused path's
+    # _resolve_alpha asserts the same; the fused fit path skips it)
+    assert method == "prism", method
+    if k < cfg.warm_alpha_iters:
+        return float(cfg.bounds[1])
+    return None
+
+
+def _phase_plan(iters: int, cfg: PrismConfig,
+                method: str) -> List[Tuple[str, object]]:
+    """[("warm", (a_0, ..)), ("fit", k), ...] — maximal runs of
+    static-alpha iterations become single warm phases."""
+    phases: List[Tuple[str, object]] = []
+    run: List[float] = []
+    for k in range(iters):
+        a = _static_alpha(k, cfg, method)
+        if a is None:
+            if run:
+                phases.append(("warm", tuple(run)))
+                run = []
+            phases.append(("fit", k))
+        else:
+            run.append(a)
+    if run:
+        phases.append(("warm", tuple(run)))
+    return phases
+
+
+def _fused_tier(cfg: PrismConfig, mshape, return_info: bool,
+                coupled: bool = False) -> bool:
+    """Trace-time fused-tier choice: kernels on, not a diagnostics run
+    (return_info needs per-iteration residuals the fused launches never
+    materialize), and the per-slice working set fits the VMEM budget."""
+    if not cfg.use_kernels or return_info or cfg.fuse == "off":
+        return False
+    if cfg.fuse == "on":
+        return True
+    from repro.kernels import ops as kops
+
+    return kops.fused_fits(mshape, jnp.dtype(cfg.dtype), coupled=coupled,
+                           budget=cfg.vmem_budget)
+
+
+def _fused_fit_step(X, cfg: PrismConfig, k: int, key, n_real,
+                    family: str, Y=None):
+    """One fitted iteration in TWO launches: fused residual+sketch-chain,
+    the XLA closed-form alpha fit, then the fused Horner application."""
+    from repro.kernels import ops as kops
+
+    apoly = poly.newton_schulz_residual(cfg.degree)
+    lo, hi = cfg.bounds
+    n = X.shape[-1]
+    S = sk.gaussian_sketch(prism.alpha_schedule_key(key, k), cfg.sketch_dim,
+                           n, dtype=X.dtype)
+    R, t = kops.residual_chain(X, S, poly.max_trace_power(apoly),
+                               family=family, Y=Y)
+    a = prism.fit_alpha_from_traces(t, apoly, lo, hi, S=S, n_real=n_real)
+    return kops.apply_g(X, R, a, degree=cfg.degree, Y=Y)
+
+
+def _run_phases(X, cfg: PrismConfig, method: str, iters: int, key,
+                return_info: bool, family: str, residual_fn,
+                Y=None, n_real=None):
+    """Shared warm/fit phase driver for the three NS families (§10).
+
+    ``residual_fn(X, Y)`` computes the family residual on the unfused
+    path; ``Y`` is non-None only for the coupled sqrt family (both
+    iterates then update per phase).  Returns (X, Y, alphas, fros) with
+    the info lists populated only under ``return_info`` (which disables
+    the fused tier — see _fused_tier).
+    """
+    coupled = Y is not None
+    fused = _fused_tier(cfg, X.shape[-2:], return_info, coupled=coupled)
+    if fused:
+        from repro.kernels import ops as kops
+    alphas, fros = [], []
+
+    def unpack(out):
+        return out if coupled else (out, Y)
+
+    for kind, payload in _phase_plan(iters, cfg, method):
+        if kind == "warm" and fused:
+            X, Y = unpack(kops.warm_tail(X, payload, degree=cfg.degree,
+                                         family=family, Y=Y))
+            continue
+        if kind == "warm":
+            for a in payload:
+                R = residual_fn(X, Y)
+                aa = jnp.full(R.shape[:-2], a, dtype=jnp.float32)
+                X = apply_g(X, R, aa, cfg.degree, "right", cfg.use_kernels)
+                if coupled:
+                    Y = apply_g(Y, R, aa, cfg.degree, "left",
+                                cfg.use_kernels)
+                if return_info:
+                    alphas.append(aa)
+                    fros.append(_fro(R)[..., 0, 0])
+            continue
+        k = payload
+        if fused and key is not None and cfg.sketch_dim > 0:
+            X, Y = unpack(_fused_fit_step(X, cfg, k, key, n_real, family,
+                                          Y=Y))
+            continue
+        R = residual_fn(X, Y)
+        a = _resolve_alpha(k, R, cfg, method, key, n_real=n_real)
+        if fused:
+            X, Y = unpack(kops.apply_g(X, R, a, degree=cfg.degree, Y=Y))
+        else:
+            X = apply_g(X, R, a, cfg.degree, "right", cfg.use_kernels)
+            if coupled:
+                Y = apply_g(Y, R, a, cfg.degree, "left", cfg.use_kernels)
+        if return_info:
+            alphas.append(a)
+            fros.append(_fro(R)[..., 0, 0])
+    return X, Y, alphas, fros
 
 
 # ---------------------------------------------------------------------------
@@ -140,14 +287,9 @@ def polar(A: jax.Array, cfg: PrismConfig = PrismConfig(),
     X = jnp.swapaxes(A, -1, -2) if transpose else A
     in_dtype = X.dtype
     X = X.astype(cfg.dtype) / _fro(X).astype(cfg.dtype)
-    alphas, fros = [], []
-    for k in range(iters):
-        R = _gram_residual(X, cfg.use_kernels)
-        a = _resolve_alpha(k, R, cfg, method, key, n_real=n_real)
-        X = apply_g(X, R, a, cfg.degree, "right", cfg.use_kernels)
-        if return_info:
-            alphas.append(a)
-            fros.append(_fro(R)[..., 0, 0])
+    X, _, alphas, fros = _run_phases(
+        X, cfg, method, iters, key, return_info, "polar",
+        lambda x, y: _gram_residual(x, cfg.use_kernels), n_real=n_real)
     X = jnp.swapaxes(X, -1, -2) if transpose else X
     X = X.astype(in_dtype)
     if return_info:
@@ -158,6 +300,16 @@ def polar(A: jax.Array, cfg: PrismConfig = PrismConfig(),
 # ---------------------------------------------------------------------------
 # Coupled square root / inverse square root (Higham Thm 3)
 # ---------------------------------------------------------------------------
+
+
+def _coupled_residual(X, Y, use_kernels: bool):
+    # R = I - Y X (Thm 3 coupling: X <- X h(YX), Y <- h(YX) Y).  This is
+    # Higham's numerically *stable* coupled form; the R = I - X Y variant
+    # written in the paper's Table-1 "Residual" column is the classically
+    # unstable coupling and diverges right after convergence (verified
+    # empirically in fp64 — see tests/test_matfn.py::test_sqrt_stability).
+    R = _eye_like(X) - _mm(Y, X, use_kernels)
+    return 0.5 * (R + jnp.swapaxes(R, -1, -2))  # stability: re-symmetrize
 
 
 def sqrtm(A: jax.Array, cfg: PrismConfig = PrismConfig(),
@@ -172,21 +324,9 @@ def sqrtm(A: jax.Array, cfg: PrismConfig = PrismConfig(),
     c = _fro(A).astype(cfg.dtype)
     X = A.astype(cfg.dtype) / c
     Y = jnp.broadcast_to(_eye_like(X), X.shape)
-    alphas, fros = [], []
-    for k in range(iters):
-        # R = I - Y X (Thm 3 coupling: X <- X h(YX), Y <- h(YX) Y).  This is
-        # Higham's numerically *stable* coupled form; the R = I - X Y variant
-        # written in the paper's Table-1 "Residual" column is the classically
-        # unstable coupling and diverges right after convergence (verified
-        # empirically in fp64 — see tests/test_matfn.py::test_sqrt_stability).
-        R = _eye_like(X) - _mm(Y, X, cfg.use_kernels)
-        R = 0.5 * (R + jnp.swapaxes(R, -1, -2))  # stability: re-symmetrize
-        a = _resolve_alpha(k, R, cfg, method, key)
-        X = apply_g(X, R, a, cfg.degree, "right", cfg.use_kernels)
-        Y = apply_g(Y, R, a, cfg.degree, "left", cfg.use_kernels)
-        if return_info:
-            alphas.append(a)
-            fros.append(_fro(R)[..., 0, 0])
+    X, Y, alphas, fros = _run_phases(
+        X, cfg, method, iters, key, return_info, "sqrt",
+        lambda x, y: _coupled_residual(x, y, cfg.use_kernels), Y=Y)
     sqrt_c = jnp.sqrt(c)
     out = (X * sqrt_c).astype(in_dtype), (Y / sqrt_c).astype(in_dtype)
     if return_info:
@@ -206,14 +346,9 @@ def signm(A: jax.Array, cfg: PrismConfig = PrismConfig(),
     iters = cfg.iterations if iters is None else iters
     in_dtype = A.dtype
     X = A.astype(cfg.dtype) / _fro(A).astype(cfg.dtype)
-    alphas, fros = [], []
-    for k in range(iters):
-        R = _eye_like(X) - _mm(X, X, cfg.use_kernels)
-        a = _resolve_alpha(k, R, cfg, method, key)
-        X = apply_g(X, R, a, cfg.degree, "right", cfg.use_kernels)
-        if return_info:
-            alphas.append(a)
-            fros.append(_fro(R)[..., 0, 0])
+    X, _, alphas, fros = _run_phases(
+        X, cfg, method, iters, key, return_info, "sign",
+        lambda x, y: _eye_like(x) - _mm(x, x, cfg.use_kernels))
     X = X.astype(in_dtype)
     if return_info:
         return X, IterInfo(jnp.stack(alphas), jnp.stack(fros))

@@ -32,6 +32,7 @@ def fit_alpha(
     sketch_dim: int = 8,
     use_kernels: bool = False,
     n_real: Optional[jax.Array] = None,
+    vmem_budget: int = 0,
 ) -> jax.Array:
     """alpha~_k = argmin_{alpha in [lo, hi]} || S h(R; alpha) ||_F^2.
 
@@ -50,6 +51,9 @@ def fit_alpha(
         recovers the traces of R_real exactly — the fitted alpha is
         bit-identical to the unpadded fit with sketch S[:, :n_real]
         (DESIGN.md §7).
+      vmem_budget: override (bytes) for the chain kernel's VMEM guard on
+        the use_kernels path (DESIGN.md §10); threaded from
+        PrismConfig.vmem_budget by resolve_alpha.
 
     Returns alpha with shape R.shape[:-2].
     """
@@ -70,13 +74,44 @@ def fit_alpha(
             # exact traces: the I_pad block adds (n - n_real) to every tr(R^i)
             pad_tr = (n - n_real).astype(jnp.float32)
             t = t - pad_tr[..., None]
-    else:
-        S = sk.gaussian_sketch(key, sketch_dim, n, dtype=R.dtype)
-        t = sk.sketched_power_traces(R, S, max_pow, use_kernels=use_kernels)
-        if n_real is not None:
-            s2 = jnp.sum(jnp.square(S.astype(jnp.float32)), axis=0)  # [n]
-            pad_mask = jnp.arange(n) >= n_real[..., None]
-            t = t - jnp.sum(s2 * pad_mask, axis=-1)[..., None]
+        return fit_alpha_from_traces(t, apoly, lo, hi)
+    S = sk.gaussian_sketch(key, sketch_dim, n, dtype=R.dtype)
+    t = sk.sketched_power_traces(R, S, max_pow, use_kernels=use_kernels,
+                                 vmem_budget=vmem_budget)
+    return fit_alpha_from_traces(t, apoly, lo, hi, S=S, n_real=n_real)
+
+
+def sketch_pad_trace_correction(S: jax.Array, n_real: jax.Array) -> jax.Array:
+    """c = sum_{j >= n_real} ||S[:, j]||^2 — the i-independent contribution
+    the residual's identity pad block adds to EVERY sketched power trace
+    of a zero-padded polar iterate (DESIGN.md §7).  fp32 end-to-end: the
+    correction must be reduced in fp32 from the same (possibly
+    bf16-rounded) sketch values the chain consumed (§9)."""
+    n = S.shape[-1]
+    s2 = jnp.sum(jnp.square(S.astype(jnp.float32)), axis=0)  # [n]
+    pad_mask = jnp.arange(n) >= n_real[..., None]
+    return jnp.sum(s2 * pad_mask, axis=-1)
+
+
+def fit_alpha_from_traces(
+    t: jax.Array,
+    apoly: poly.AlphaPoly,
+    lo: float,
+    hi: float,
+    S: Optional[jax.Array] = None,
+    n_real: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Closed-form alpha fit from PRECOMPUTED power traces.
+
+    The back half of ``fit_alpha``, split out so the fused
+    residual+chain kernel tier (kernels/ops.residual_chain, DESIGN.md
+    §10) — which reduces the traces inside the residual launch — feeds
+    the identical W-map + constrained minimization.  ``t`` holds powers
+    0..max_trace_power (fp32); with ``n_real`` the sketched pad-trace
+    correction (requires ``S``) is applied first.
+    """
+    if n_real is not None:
+        t = t - sketch_pad_trace_correction(S, n_real)[..., None]
     W = jnp.asarray(poly.trace_weight_matrix(apoly), dtype=jnp.float32)
     coeffs = jnp.einsum("ki,...i->...k", W, t)
     return poly.minimize_alpha_poly(coeffs, lo, hi)
@@ -119,4 +154,5 @@ def resolve_alpha(
     if key is not None:
         key = alpha_schedule_key(key, k)
     return fit_alpha(R, apoly, lo, hi, key=key, sketch_dim=cfg.sketch_dim,
-                     use_kernels=cfg.use_kernels, n_real=n_real)
+                     use_kernels=cfg.use_kernels, n_real=n_real,
+                     vmem_budget=cfg.vmem_budget)

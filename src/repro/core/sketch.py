@@ -30,7 +30,8 @@ def gaussian_sketch(key: jax.Array, p: int, n: int, dtype=jnp.float32) -> jax.Ar
 
 
 def sketched_power_traces(R: jax.Array, S: jax.Array, max_power: int,
-                          use_kernels: bool = False) -> jax.Array:
+                          use_kernels: bool = False,
+                          vmem_budget: int = 0) -> jax.Array:
     """t_i = tr(S R^i S^T) for i = 0..max_power.
 
     Args:
@@ -39,13 +40,15 @@ def sketched_power_traces(R: jax.Array, S: jax.Array, max_power: int,
       max_power: largest power (4d+2 for Newton-Schulz degree d).
       use_kernels: route the chained R @ V products + trace epilogue through
         the Pallas ``sketch_traces`` kernel.
+      vmem_budget: override (bytes) for the chain kernel's VMEM guard
+        (DESIGN.md §10); 0 defers to REPRO_VMEM_BUDGET / the default.
 
     Returns: [..., max_power + 1] stacked traces (fp32).
     """
     if use_kernels:
         from repro.kernels import ops as kops
 
-        return kops.sketch_traces(R, S, max_power)
+        return kops.sketch_traces(R, S, max_power, budget=vmem_budget)
     # Accumulation semantics match the fused chain kernel (DESIGN.md §9):
     # each product R @ V accumulates fp32, the trace epilogue reduces the
     # fp32 accumulator (NOT the rounded V'), and only the V that feeds the

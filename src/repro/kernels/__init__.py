@@ -1,15 +1,20 @@
 """Pallas TPU kernels for the PRISM GEMM hot spots.
 
-  matmul_add    D = alpha A @ B + beta C   (fused Horner step)
-  gram          R = alpha I + beta X^T X   (symmetric syrk, half MXU work)
-  sketch_traces t_i = tr(S R^i S^T)        (whole chain in ONE launch,
-                                            V resident in VMEM, fused
-                                            trace epilogues)
+  matmul_add     D = alpha A @ B + beta C   (fused Horner step)
+  gram           R = alpha I + beta X^T X   (symmetric syrk, half MXU work)
+  sketch_traces  t_i = tr(S R^i S^T)        (whole chain in ONE launch,
+                                             V resident in VMEM, fused
+                                             trace epilogues)
+  fused_iter     single-launch fused-iteration tier (DESIGN.md §10):
+                 residual + sketch chain in one launch, the d-GEMM Horner
+                 application in one launch, and whole constant-alpha warm
+                 tails in one launch with X ping-ponging in VMEM
 
 All grids carry a leading batch dimension so a [B, m, n] parameter bucket
 is one launch (DESIGN.md §7).  ops.py — jit wrappers w/ leading-dim
-collapsing + CPU fallback; ref.py — jnp oracles.
+collapsing, CPU fallback, and the VMEM-budget tier choice; ref.py — jnp
+oracles (including the fused accumulation order).
 """
-from repro.kernels import ops, ref
+from repro.kernels import fused_iter, ops, ref
 
-__all__ = ["ops", "ref"]
+__all__ = ["fused_iter", "ops", "ref"]

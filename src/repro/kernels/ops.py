@@ -19,6 +19,13 @@ Precision (DESIGN.md §9): every kernel takes operands in the caller's
 compute dtype (fp32 or bf16) and accumulates fp32 on a VMEM scratch;
 trace epilogues stay fp32 end-to-end.  The ref.py oracles reproduce the
 same accumulation semantics, so dispatch mode never changes the contract.
+
+Fused-iteration tier (DESIGN.md §10): ``residual_chain`` / ``apply_g`` /
+``warm_tail`` collapse a fitted iteration to 2 launches and a whole
+constant-alpha run to 1.  The tier is chosen at trace time per bucket by
+``fused_fits`` — a pure shape test against the VMEM budget
+(REPRO_VMEM_BUDGET / config ``vmem_budget``), independent of the batch
+size because the batch dim is the streamed grid dimension.
 """
 from __future__ import annotations
 
@@ -27,6 +34,7 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import fused_iter as _fused
 from repro.kernels import gram as _gram
 from repro.kernels import matmul_add as _mma
 from repro.kernels import ref as _ref
@@ -34,6 +42,58 @@ from repro.kernels import sketch_traces as _sk
 
 _LANE = 128  # TPU lane width: sketch dim padded up to this
 _DEFAULT_INTERPRET_MAX_ELEMS = 1 << 21
+# Fused-tier VMEM budget (DESIGN.md §10): ~16 MiB/core minus headroom for
+# the grid pipeline's double buffering.  Override via REPRO_VMEM_BUDGET
+# or the PrismConfig/OptimizerConfig ``vmem_budget`` knob.
+_DEFAULT_VMEM_BUDGET = 12 << 20
+
+
+def vmem_budget(override: int = 0) -> int:
+    """Effective VMEM budget in bytes: config override > env > default."""
+    if override:
+        return int(override)
+    return int(os.environ.get("REPRO_VMEM_BUDGET", _DEFAULT_VMEM_BUDGET))
+
+
+def fused_vmem_bytes(mshape, dtype, *, coupled: bool = False,
+                     sketch_pad: int = _LANE) -> int:
+    """Modeled per-grid-step VMEM working set of the fused-iteration
+    kernels for ONE [m, n] slice (DESIGN.md §10).
+
+    Batch-size independent by construction: the batch dim is the streamed
+    grid dimension, so VMEM holds one slice's state at a time.  Counts
+    the warm tail's footprint — the largest of the three kernels:
+    double-buffered in/out X blocks + the two ping-pong buffers (doubled
+    for the coupled family's Y), R plus its fp32 residual accumulator,
+    the fp32 Horner accumulator pair, and the chain's St/V lanes.
+    """
+    import numpy as np
+
+    m, n = int(mshape[-2]), int(mshape[-1])
+    item = np.dtype(dtype).itemsize
+    M = m + (-m) % _fused._SUBLANE if not coupled and m != n else \
+        m + (-m) % _LANE
+    N = n + (-n) % _LANE
+    per_mat = M * N * item
+    mats = 6 * per_mat * (2 if coupled else 1)   # 4 in/out (dbl-buf) + 2 pp
+    resid = N * N * (item + 4)                   # R + fp32 accumulator
+    horner = 2 * M * N * 4                       # x32 + fp32 Horner acc
+    chain = N * sketch_pad * (3 * item + 4)      # St, V, V' + fp32 acc
+    return mats + resid + horner + chain
+
+
+def fused_fits(mshape, dtype, *, coupled: bool = False,
+               budget: int = 0) -> bool:
+    """Trace-time fused-tier choice for a bucket of [m, n] matrices."""
+    return fused_vmem_bytes(mshape, dtype, coupled=coupled) <= \
+        vmem_budget(budget)
+
+
+def _gd_coeffs(degree: int):
+    """Ascending Taylor coefficients f_0..f_{d-1} of g_d (static floats)."""
+    from repro.core import polynomials as poly
+
+    return tuple(float(c) for c in poly.taylor_inv_sqrt(degree - 1))
 
 
 def _interpret_cutoff() -> int:
@@ -108,12 +168,31 @@ def gram(X, *, alpha: float = 1.0, beta: float = -1.0,
     return R.reshape(lead + R.shape[-2:]) if lead else R
 
 
-def sketch_traces(R, S, max_power: int, *, bn: int = 256):
+def _chain_vmem_bytes(n: int, p: int, dtype, bn: int) -> int:
+    """VMEM footprint of the whole-chain kernel: full St plus the two
+    [N, p128] ping-pong buffers stay resident across powers, plus the
+    double-buffered R tile and the fp32 trace accumulator."""
+    bn = min(bn, n)
+    N = n + (-n) % bn
+    item = jnp.dtype(dtype).itemsize
+    return 3 * N * p * item + 2 * bn * bn * item + bn * p * 4
+
+
+def sketch_traces(R, S, max_power: int, *, bn: int = 256,
+                  budget: int = 0):
     """t_i = tr(S R^i S^T), i = 0..max_power; one fused chain launch.
 
     ``bn`` tiles both the rows and the contraction dim of the chain (they
     must coincide: V's row partition is reused as the contraction
     partition of the next power inside the single launch).
+
+    VMEM guard (DESIGN.md §10): the whole-chain kernel keeps St and two
+    V ping-pong buffers — O(n * 128) bytes — resident for the entire
+    launch with no size bound.  When that footprint exceeds the VMEM
+    budget (``budget`` override, else REPRO_VMEM_BUDGET), the chain
+    falls back to a loop of bounded-footprint per-step ``sketch_step``
+    launches: max_power launches instead of one, but never an
+    over-budget kernel.
     """
     mode = _mode(R)
     if mode == "ref":
@@ -124,10 +203,109 @@ def sketch_traces(R, S, max_power: int, *, bn: int = 256):
     lead = R.shape[:-2]
     (Rb,) = _collapse(lead, R) if lead else (R[None],)
     t0 = jnp.sum(St.astype(jnp.float32) * St.astype(jnp.float32))
-    ts = _sk.sketch_chain(Rb, St, max_power, bn=bn, interpret=interp)
+    n = R.shape[-1]
+    if _chain_vmem_bytes(n, St.shape[1], R.dtype, bn) <= \
+            vmem_budget(budget):
+        ts = _sk.sketch_chain(Rb, St, max_power, bn=bn, interpret=interp)
+    else:
+        V = jnp.broadcast_to(St, Rb.shape[:-2] + St.shape)
+        steps = []
+        for _ in range(max_power):
+            V, t_i = _sk.sketch_step(Rb, V, St, bm=bn, bk=bn,
+                                     interpret=interp)
+            steps.append(t_i)
+        ts = jnp.stack(steps, axis=-1)
     t = jnp.concatenate(
         [jnp.broadcast_to(t0, ts.shape[:-1] + (1,)), ts], axis=-1)
     return t.reshape(lead + (max_power + 1,))
+
+
+# ---------------------------------------------------------------------------
+# Fused-iteration tier (DESIGN.md §10): single-launch residual+chain,
+# Horner application, and constant-alpha warm tails
+# ---------------------------------------------------------------------------
+
+
+def residual_chain(X, S, max_power: int, *, family: str = "polar", Y=None):
+    """(R, t): the family residual AND the whole sketched power-trace
+    chain in ONE launch — R never leaves VMEM before the traces are
+    reduced (it reaches HBM once, as the output the Horner launch reads).
+
+    X: [..., m, n]; S: [p, n] sketch; Y: the coupled sqrt family's second
+    iterate.  Returns R [..., n, n] (X.dtype) and fp32 traces
+    t [..., max_power + 1] for powers 0..max_power (t0 is sketch-only).
+    """
+    mode = _mode(X, Y)
+    S32 = S.astype(jnp.float32)
+    t0 = jnp.sum(S32 * S32)
+    lead = X.shape[:-2]
+    if mode == "ref":
+        R, ts = _ref.residual_chain(X, S, max_power, family=family, Y=Y)
+    else:
+        interp = mode == "interpret"
+        p = S.shape[0]
+        St = jnp.pad(S.T.astype(X.dtype), ((0, 0), (0, (-p) % _LANE)))
+        Xb, Yb = _collapse(lead, X, Y) if lead else \
+            (X[None], None if Y is None else Y[None])
+        Rb, ts = _fused.residual_chain(Xb, St, max_power, family=family,
+                                       Y=Yb, interpret=interp)
+        n = Rb.shape[-1]
+        R = Rb.reshape(lead + (n, n))
+        ts = ts.reshape(lead + (max_power,))
+    t = jnp.concatenate(
+        [jnp.broadcast_to(t0, ts.shape[:-1] + (1,)), ts], axis=-1)
+    return R, t
+
+
+def apply_g(X, R, alpha, *, degree: int, Y=None):
+    """X g_d(R; alpha) (and g_d(R; alpha) Y when coupled) — the d Horner
+    GEMMs in ONE launch with the accumulator resident in VMEM and the
+    fitted fp32 alpha applied on the fp32 accumulator (never pre-rounded
+    to the compute dtype; DESIGN.md §9/§10).
+
+    alpha: scalar or [...] matching X's leading dims, fp32.
+    """
+    coeffs = _gd_coeffs(degree)
+    mode = _mode(X, R, Y)
+    if mode == "ref":
+        return _ref.apply_g(X, R, alpha, coeffs=coeffs, Y=Y)
+    interp = mode == "interpret"
+    lead = X.shape[:-2]
+    Xb, Rb, Yb = _collapse(lead, X, R, Y) if lead else \
+        (X[None], R[None], None if Y is None else Y[None])
+    a = jnp.broadcast_to(jnp.asarray(alpha, jnp.float32),
+                         lead).reshape(Xb.shape[0])
+    out = _fused.apply_g(Xb, Rb, a, coeffs=coeffs, Y=Yb, interpret=interp)
+    if Y is None:
+        return out.reshape(lead + out.shape[1:])
+    return (out[0].reshape(lead + out[0].shape[1:]),
+            out[1].reshape(lead + out[1].shape[1:]))
+
+
+def warm_tail(X, alphas, *, degree: int, family: str = "polar", Y=None):
+    """An entire run of constant-alpha iterations in ONE launch: X (and
+    Y) ping-pong in VMEM, HBM sees one read + one write of each operand
+    for the whole run (DESIGN.md §10).
+
+    alphas: static sequence of per-iteration floats (the PRISM warm value
+    u, or classical Taylor coefficients — any static schedule).
+    """
+    alphas = tuple(float(a) for a in alphas)
+    coeffs = _gd_coeffs(degree)
+    mode = _mode(X, Y)
+    if mode == "ref":
+        return _ref.warm_tail(X, alphas, coeffs=coeffs, family=family, Y=Y)
+    interp = mode == "interpret"
+    lead = X.shape[:-2]
+    Xb, Yb = _collapse(lead, X, Y) if lead else \
+        (X[None], None if Y is None else Y[None])
+    arr = jnp.asarray(alphas, jnp.float32)
+    out = _fused.warm_tail(Xb, arr, len(alphas), family=family,
+                           coeffs=coeffs, Y=Yb, interpret=interp)
+    if family == "sqrt":
+        return (out[0].reshape(lead + out[0].shape[1:]),
+                out[1].reshape(lead + out[1].shape[1:]))
+    return out.reshape(lead + out.shape[1:])
 
 
 def count_launches(fn, *args) -> int:
@@ -141,7 +319,9 @@ def count_launches(fn, *args) -> int:
     DESIGN.md §7).
     """
     targets = [(_gram, "gram_upper"), (_mma, "matmul_add"),
-               (_sk, "sketch_chain"), (_sk, "sketch_step")]
+               (_sk, "sketch_chain"), (_sk, "sketch_step"),
+               (_fused, "residual_chain"), (_fused, "apply_g"),
+               (_fused, "warm_tail")]
     counter = {"n": 0}
 
     def wrap(f):

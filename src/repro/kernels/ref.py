@@ -34,6 +34,86 @@ def gram(X, *, alpha=1.0, beta=-1.0):
     return out.astype(X.dtype)
 
 
+def _residual(X, Y=None, *, family="polar"):
+    """Family residual with the fused kernels' accumulation order: the
+    I - <product> epilogue (and the sqrt re-symmetrization) runs on the
+    fp32 MXU accumulator, rounding ONCE to the compute dtype."""
+    if family == "polar":
+        G = jnp.matmul(jnp.swapaxes(X, -1, -2), X,
+                       preferred_element_type=jnp.float32)
+    elif family == "sign":
+        G = jnp.matmul(X, X, preferred_element_type=jnp.float32)
+    else:
+        G = jnp.matmul(Y, X, preferred_element_type=jnp.float32)
+    r32 = jnp.eye(G.shape[-1], dtype=jnp.float32) - G
+    if family == "sqrt":
+        r32 = 0.5 * (r32 + jnp.swapaxes(r32, -1, -2))
+    return r32.astype(X.dtype)
+
+
+def residual_chain(X, S, max_power: int, *, family="polar", Y=None):
+    """(R, t): fused residual + sketched power-trace chain oracle.
+
+    Mirrors fused_iter.residual_chain op for op: the chain consumes the
+    ROUNDED compute-dtype R while every trace reduces St (fp32-cast)
+    against the fp32 accumulator of R @ V.  Returns R [..., n, n] and
+    fp32 traces [..., max_power] for powers 1..max_power.
+    """
+    R = _residual(X, Y, family=family)
+    St = S.T.astype(R.dtype)
+    St32 = St.astype(jnp.float32)
+    V = jnp.broadcast_to(St, R.shape[:-2] + St.shape)
+    traces = []
+    for _ in range(max_power):
+        Vacc = jnp.matmul(R, V, preferred_element_type=jnp.float32)
+        traces.append(jnp.sum(St32 * Vacc, axis=(-2, -1)))
+        V = Vacc.astype(R.dtype)
+    return R, jnp.stack(traces, axis=-1)
+
+
+def _horner(X, R, alpha32, coeffs, side):
+    x32 = X.astype(jnp.float32)
+    acc = alpha32 * x32
+    for j in range(len(coeffs) - 1, -1, -1):
+        lo = acc.astype(X.dtype)
+        prod = (jnp.matmul(lo, R, preferred_element_type=jnp.float32)
+                if side == "right"
+                else jnp.matmul(R, lo, preferred_element_type=jnp.float32))
+        acc = prod + coeffs[j] * x32
+    return acc.astype(X.dtype)
+
+
+def apply_g(X, R, alpha, *, coeffs, Y=None):
+    """Fused d-GEMM Horner oracle for X g_d(R; alpha) (+ g_d(R; alpha) Y).
+
+    Mirrors fused_iter.apply_g: the accumulator stays fp32 across all d
+    GEMMs (each dot's operand rounds to the compute dtype, the carried
+    f_j * X epilogues never do) and the fp32 alpha multiplies the fp32
+    accumulator directly — never pre-rounded to the compute dtype.
+    """
+    a = jnp.asarray(alpha, jnp.float32)
+    if a.ndim:
+        a = a[..., None, None]
+    out = _horner(X, R, a, coeffs, "right")
+    if Y is None:
+        return out
+    return out, _horner(Y, R, a, coeffs, "left")
+
+
+def warm_tail(X, alphas, *, coeffs, family="polar", Y=None):
+    """Fused constant-alpha multi-iteration oracle (one residual + one
+    Horner application per alpha, fused accumulation order throughout)."""
+    for a in alphas:
+        R = _residual(X, Y, family=family)
+        a32 = jnp.asarray(a, jnp.float32)
+        if family == "sqrt":
+            X, Y = (_horner(X, R, a32, coeffs, "right"),
+                    _horner(Y, R, a32, coeffs, "left"))
+        else:
+            X = _horner(X, R, a32, coeffs, "right")
+    return (X, Y) if family == "sqrt" else X
+
+
 def sketch_traces(R, S, max_power: int):
     """t_i = tr(S R^i S^T), i = 0..max_power (fp32).
 

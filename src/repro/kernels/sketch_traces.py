@@ -39,25 +39,25 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(r_ref, v_ref, st_ref, vout_ref, t_ref, acc_ref, *, n_k):
-    i, k = pl.program_id(0), pl.program_id(1)
+    b, i, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
 
     @pl.when((i == 0) & (k == 0))
     def _init_trace():
-        t_ref[0] = jnp.float32(0.0)
+        t_ref[b] = jnp.float32(0.0)
 
     @pl.when(k == 0)
     def _init_acc():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += jnp.dot(r_ref[...], v_ref[...],
+    acc_ref[...] += jnp.dot(r_ref[0], v_ref[0],
                             preferred_element_type=jnp.float32)
 
     @pl.when(k == n_k - 1)
     def _epilogue():
         vnew = acc_ref[...]
-        vout_ref[...] = vnew.astype(vout_ref.dtype)
+        vout_ref[0] = vnew.astype(vout_ref.dtype)
         # fused trace epilogue: tr contribution of this row tile
-        t_ref[0] += jnp.sum(st_ref[...].astype(jnp.float32) * vnew)
+        t_ref[b] += jnp.sum(st_ref[...].astype(jnp.float32) * vnew)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bk", "interpret"))
@@ -66,38 +66,47 @@ def sketch_step(R: jax.Array, V: jax.Array, St: jax.Array,
                 interpret: bool = False):
     """(V', t') = (R @ V, tr-contraction of St with R @ V).
 
-    R: [n, n]; V, St: [n, p128] (sketch transposed, lane-padded).
-    Returns V' [n, p128] and the scalar t' = sum(St * V').
+    R: [n, n] or [B, n, n]; V matches R's batching with [.., n, p128]
+    rows; St: [n, p128], shared across the batch (sketch transposed,
+    lane-padded).  Returns V' and t' = sum(St * V') per batch element.
+    Bounded-VMEM building block: ops.sketch_traces falls back to a loop
+    of these when the whole-chain kernel's VMEM footprint (which grows
+    with n) exceeds the budget (DESIGN.md §10).
     """
-    n, p = V.shape
+    squeeze = R.ndim == 2
+    if squeeze:
+        R, V = R[None], V[None]
+    nb, n, _ = R.shape
+    p = V.shape[-1]
     bm, bk = min(bm, n), min(bk, n)
     mp = (-n) % bm   # row padding (output rows)
     kp = (-n) % bk   # contraction-dim padding
-    Rp = jnp.pad(R, ((0, mp), (0, kp)))
-    Vp = jnp.pad(V, ((0, kp), (0, 0)))
+    Rp = jnp.pad(R, ((0, 0), (0, mp), (0, kp)))
+    Vp = jnp.pad(V, ((0, 0), (0, kp), (0, 0)))
     Stp = jnp.pad(St, ((0, mp), (0, 0)))
-    N, K = Rp.shape
+    N, K = Rp.shape[1], Rp.shape[2]
     n_k = K // bk
     vout, t = pl.pallas_call(
         functools.partial(_kernel, n_k=n_k),
-        grid=(N // bm, n_k),
+        grid=(nb, N // bm, n_k),
         in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, k: (i, k)),
-            pl.BlockSpec((bk, p), lambda i, k: (k, 0)),
-            pl.BlockSpec((bm, p), lambda i, k: (i, 0)),
+            pl.BlockSpec((1, bm, bk), lambda b, i, k: (b, i, k)),
+            pl.BlockSpec((1, bk, p), lambda b, i, k: (b, k, 0)),
+            pl.BlockSpec((bm, p), lambda b, i, k: (i, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((bm, p), lambda i, k: (i, 0)),
+            pl.BlockSpec((1, bm, p), lambda b, i, k: (b, i, 0)),
             pl.BlockSpec(memory_space=pltpu.SMEM),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((N, p), R.dtype),
-            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((nb, N, p), R.dtype),
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((bm, p), jnp.float32)],
         interpret=interpret,
     )(Rp, Vp, Stp)
-    return vout[:n], t[0]
+    vout = vout[:, :n]
+    return (vout[0], t[0]) if squeeze else (vout, t)
 
 
 # ---------------------------------------------------------------------------

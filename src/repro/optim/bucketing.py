@@ -43,13 +43,14 @@ that are dropped after the gather).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro import sharding_ctx
-from repro.config import OptimizerConfig
+from repro.config import OptimizerConfig, PrismConfig
 from repro.core import matfn
 
 
@@ -175,6 +176,28 @@ def _gram_real_dims(bucket: Bucket) -> jax.Array:
     return jnp.asarray(reals, jnp.int32)
 
 
+def resolve_fused_tier(pcfg: PrismConfig, bucket: Bucket,
+                       coupled: bool = False) -> PrismConfig:
+    """Pin the fused-iteration tier (DESIGN.md §10) for one bucket.
+
+    The choice is made HERE, at trace time, from the bucket's static
+    matrix shape against the VMEM budget — it is batch-size independent
+    (the batch dim streams through the fused grids), so the same tier
+    serves the replicated bucket and every §8 per-device slice.  "auto"
+    resolves to an explicit "on"/"off" so the downstream newton_schulz
+    phase loop never re-derives it; forced values pass through.
+    """
+    if pcfg.fuse != "auto" or not pcfg.use_kernels:
+        return pcfg
+    from repro.kernels import ops as kops
+
+    m, n = bucket.shape
+    mshape = (max(m, n), min(m, n))  # polar transposes to m >= n
+    fits = kops.fused_fits(mshape, jnp.dtype(pcfg.dtype), coupled=coupled,
+                           budget=pcfg.vmem_budget)
+    return dataclasses.replace(pcfg, fuse="on" if fits else "off")
+
+
 # ------------------------------------------------------------------ sharding
 
 def mesh_batch_axes(cfg: Optional[OptimizerConfig]):
@@ -279,12 +302,13 @@ def polar_bucketed(views: Sequence[jax.Array], cfg: OptimizerConfig,
         kk = (jax.random.fold_in(key, bi) if key is not None else None)
         n_real = (_gram_real_dims(b)
                   if b.padded and method == "prism" else None)
+        pcfg_b = resolve_fused_tier(pcfg, b)
 
-        def run(x, *nr, _kk=kk):
+        def run(x, *nr, _kk=kk, _pcfg=pcfg_b):
             if method == "svd":
                 return matfn.polar(x, method="svd")
             kw = {"n_real": nr[0]} if nr else {}
-            return matfn.polar(x, method=method, cfg=pcfg, key=_kk,
+            return matfn.polar(x, method=method, cfg=_pcfg, key=_kk,
                                **kw)
 
         if mesh is not None and not local_reshard:
@@ -316,6 +340,11 @@ def transform_bucketed(mats: Sequence[jax.Array], fn,
     bucket.  fn must therefore be per-slice (elementwise over the batch
     dim); use the Bucket/index only for static metadata (shape, PRNG
     folding), never to index companion arrays by entry offset.
+
+    Fused tier: fn's inner matfn calls carry their own PrismConfig, so
+    the §10 tier resolves inside the iteration family (newton_schulz
+    ``_fused_tier``) from the same static bucket shape — callers pick it
+    up with zero changes, exactly like ``polar_bucketed``.
     """
     buckets = plan_buckets([m.shape for m in mats], pad=False)
     mesh, mesh_axes = mesh_batch_axes(cfg)

@@ -176,19 +176,22 @@ def _count_pallas_launches(fn, *args):
 @pytest.mark.parametrize("degree", [1, 2])
 def test_constant_launch_count(monkeypatch, key, degree):
     """One fitted PRISM-NS iteration over a [B, n, n] bucket issues a
-    constant number of Pallas launches: independent of B and of the sketch
-    chain length max_power = 4d+2 (the whole chain is ONE launch)."""
+    constant number of Pallas launches, independent of B and of the sketch
+    chain length max_power = 4d+2: with the fused tier (the default for
+    VMEM-fitting buckets, DESIGN.md §10) exactly 2 — residual+chain, then
+    the fused Horner — independent of d as well; the §7 batch-grid tier
+    (fuse="off") keeps its 2 + d contract."""
     monkeypatch.setenv("REPRO_KERNEL_MODE", "interpret")
-    cfg = PrismConfig(degree=degree, iterations=1, warm_alpha_iters=0,
-                      sketch_dim=8, use_kernels=True)
-    counts = []
-    for B in (1, 4, 16):
-        A = jnp.zeros((B, 64, 48))
-        counts.append(_count_pallas_launches(
-            lambda A: matfn.polar(A, method="prism", cfg=cfg, key=key), A))
-    # gram + fused sketch chain + degree Horner GEMMs, regardless of B
-    # (and of max_power: the old per-step chain alone was 4d+2 launches)
-    assert counts == [2 + degree] * 3, counts
+    for fuse, want in (("auto", 2), ("off", 2 + degree)):
+        cfg = PrismConfig(degree=degree, iterations=1, warm_alpha_iters=0,
+                          sketch_dim=8, use_kernels=True, fuse=fuse)
+        counts = []
+        for B in (1, 4, 16):
+            A = jnp.zeros((B, 64, 48))
+            counts.append(_count_pallas_launches(
+                lambda A: matfn.polar(A, method="prism", cfg=cfg, key=key),
+                A))
+        assert counts == [want] * 3, (fuse, counts)
 
 
 def test_trainer_skip_step_zero_matfn_launches(monkeypatch, key):
@@ -227,12 +230,16 @@ def test_trainer_skip_step_zero_matfn_launches(monkeypatch, key):
 
 def test_fitted_iteration_launches_scale_with_iters_only(monkeypatch, key):
     monkeypatch.setenv("REPRO_KERNEL_MODE", "interpret")
-    def n_launches(iters, warm):
+    def n_launches(iters, warm, fuse="auto"):
         cfg = PrismConfig(degree=2, iterations=iters, warm_alpha_iters=warm,
-                          sketch_dim=8, use_kernels=True)
+                          sketch_dim=8, use_kernels=True, fuse=fuse)
         return _count_pallas_launches(
             lambda A: matfn.polar(A, method="prism", cfg=cfg, key=key),
             jnp.zeros((8, 64, 64)))
-    # fitted iteration: 4 launches; warm iteration skips the chain: 3
-    assert n_launches(3, 0) == 12
-    assert n_launches(3, 1) == 11
+    # fused tier (§10): 2 per fitted iteration, 1 for the whole warm tail
+    assert n_launches(3, 0) == 6
+    assert n_launches(3, 1) == 1 + 2 * 2
+    assert n_launches(3, 3) == 1
+    # §7 batch-grid tier: fitted 2+d, warm skips the chain (1+d)
+    assert n_launches(3, 0, fuse="off") == 12
+    assert n_launches(3, 1, fuse="off") == 11

@@ -290,20 +290,25 @@ def test_bf16_staleness_cache_schedule_invariant(key):
 
 
 def test_launch_counts_dtype_independent(monkeypatch, key):
-    """The §7 launch-count contract is precision-blind: a fitted PRISM-NS
-    iteration issues 2+d launches per bucket whether the operands are
-    fp32 or bf16 (bf16 changes tile CONTENTS, never dispatch structure)."""
+    """The launch-count contracts are precision-blind (bf16 changes tile
+    CONTENTS, never dispatch structure): a fitted PRISM-NS iteration is 2
+    launches on the fused tier (§10) and 2+d on the §7 batch-grid tier,
+    whether the operands are fp32 or bf16."""
     monkeypatch.setenv("REPRO_KERNEL_MODE", "interpret")
     from repro.kernels import ops
 
-    counts = {}
-    for dt in ("float32", "bfloat16"):
-        cfg = PrismConfig(degree=2, iterations=1, warm_alpha_iters=0,
-                          sketch_dim=8, use_kernels=True, dtype=dt)
-        A = jnp.zeros((4, 64, 48), jnp.dtype(dt))
-        counts[dt] = ops.count_launches(
-            lambda A: matfn.polar(A, method="prism", cfg=cfg, key=key), A)
-    assert counts["float32"] == counts["bfloat16"] == 4, counts
+    for fuse, want in (("auto", 2), ("off", 4)):
+        counts = {}
+        for dt in ("float32", "bfloat16"):
+            cfg = PrismConfig(degree=2, iterations=1, warm_alpha_iters=0,
+                              sketch_dim=8, use_kernels=True, dtype=dt,
+                              fuse=fuse)
+            A = jnp.zeros((4, 64, 48), jnp.dtype(dt))
+            counts[dt] = ops.count_launches(
+                lambda A: matfn.polar(A, method="prism", cfg=cfg, key=key),
+                A)
+        assert counts["float32"] == counts["bfloat16"] == want, \
+            (fuse, counts)
 
 
 def test_precision_policy_validation():
