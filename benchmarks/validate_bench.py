@@ -41,7 +41,55 @@ BATCHED_MATFN_TOP = {
     "dtypes": lambda x: _str_list(x) and "float32" in x and "bfloat16" in x,
     "notes": _str_list,
     "results": lambda x: isinstance(x, list) and x,
+    # §11 adaptive early stopping: instance-adaptive iteration counts
+    "adaptive": lambda x: isinstance(x, list) and x,
 }
+
+ADAPTIVE_ROW = {
+    "n": _pos_int,
+    "B": _pos_int,
+    "tol": lambda x: _is_num(x) and x > 0,
+    "iters_budget": _pos_int,
+    "iters_mean": lambda x: _is_num(x) and x >= 1,
+    "iters_max": _pos_int,
+    "iters_mean_ill": lambda x: _is_num(x) and x >= 1,
+    "iters_max_ill": _pos_int,
+    "resid_max": _nonneg,
+    "resid_max_ill": _nonneg,
+}
+
+
+def _check_adaptive_row(row: dict, where: str):
+    errs = []
+    for field, ok in ADAPTIVE_ROW.items():
+        if field not in row:
+            errs.append(f"{where}: missing field {field!r}")
+        elif not ok(row[field]):
+            errs.append(f"{where}: bad value {field}={row[field]!r}")
+    if errs:
+        return errs
+    # §11 invariants.  The headline: at an equal residual target, the
+    # well-conditioned bucket's MEAN certified count must sit strictly
+    # below the fixed-iters baseline — the count a certificate-free
+    # engine provisions, i.e. what the ill-conditioned straggler needed.
+    if not row["iters_mean"] < row["iters_max_ill"]:
+        errs.append(f"{where}: iters_mean must be strictly below the "
+                    f"fixed-iters baseline iters_max_ill "
+                    f"({row['iters_mean']} vs {row['iters_max_ill']})")
+    if row["iters_mean"] > row["iters_max"]:
+        errs.append(f"{where}: iters_mean > iters_max")
+    if row["iters_mean_ill"] > row["iters_max_ill"]:
+        errs.append(f"{where}: iters_mean_ill > iters_max_ill")
+    for f in ("iters_max", "iters_max_ill"):
+        if row[f] > row["iters_budget"]:
+            errs.append(f"{where}: {f} exceeds the iteration budget")
+    # "equal residual targets": both buckets actually met tol (modest
+    # slack for the p=8 sketch certificate's variance)
+    for f in ("resid_max", "resid_max_ill"):
+        if row[f] > 1.5 * row["tol"]:
+            errs.append(f"{where}: {f}={row[f]} above the tol target "
+                        f"{row['tol']}")
+    return errs
 
 BATCHED_MATFN_ROW = {
     "n": _pos_int,
@@ -129,6 +177,11 @@ def validate_batched_matfn(doc: dict, name: str):
             errs.append(f"{name}: results[{i}] is not an object")
             continue
         errs.extend(_check_batched_matfn_row(row, f"{name}: results[{i}]"))
+    for i, row in enumerate(doc.get("adaptive") or []):
+        if not isinstance(row, dict):
+            errs.append(f"{name}: adaptive[{i}] is not an object")
+            continue
+        errs.extend(_check_adaptive_row(row, f"{name}: adaptive[{i}]"))
     return errs
 
 

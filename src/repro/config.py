@@ -99,6 +99,21 @@ class PrismConfig:
       vmem_budget: VMEM budget in bytes for the fused tier (and the
         sketch-chain size guard).  0 defers to ``REPRO_VMEM_BUDGET`` or
         the built-in default (kernels/ops.py).
+      tol: convergence certificate for ADAPTIVE early stopping
+        (DESIGN.md §11).  When set, every FITTED iteration reads the
+        sketched residual estimate est_r ~ ||R_k||_F off the trace chain
+        it already computes (t_2 = tr(S R^2 S^T), fp32, §7 pad-corrected)
+        and freezes any [B, n, n] slice whose est_r <= tol — the fit
+        phase becomes a lax.while_loop that exits when the SLOWEST slice
+        certifies, so ``iterations`` turns from a fixed cost into a
+        budget (upper bound).  ``None`` (default) keeps the fixed-iters
+        chains: fully unrolled, reverse-differentiable, bit-identical to
+        previous releases.  The certificate is an UNBIASED sketch
+        estimate, not a bound: with sketch_dim = p its relative std is
+        ~sqrt(2/p), so a slice can certify while its true ||R||_F sits
+        slightly above tol (sketch_dim=0 makes est_r exact).  Warm
+        iterations and classical (fit-free) chains never consult tol —
+        they have no trace chain to read — and run their static schedule.
     """
 
     degree: int = 2
@@ -110,11 +125,15 @@ class PrismConfig:
     dtype: str = "float32"
     fuse: str = "auto"
     vmem_budget: int = 0
+    tol: Optional[float] = None
 
     def __post_init__(self):
         if self.fuse not in ("auto", "on", "off"):
             raise ValueError(f"PrismConfig.fuse must be auto|on|off, "
                              f"got {self.fuse!r}")
+        if self.tol is not None and not self.tol > 0.0:
+            raise ValueError(f"PrismConfig.tol must be positive or None, "
+                             f"got {self.tol!r}")
 
     @property
     def bounds(self) -> Tuple[float, float]:
@@ -256,6 +275,13 @@ class OptimizerConfig:
     # resolved_prism so bucketing and the iteration families share one
     # number.  The tier itself stays per-bucket automatic (prism.fuse).
     vmem_budget: int = 0
+    # adaptive early stopping (DESIGN.md §11): convergence certificate for
+    # the fitted matfn iterations — a bucket slice freezes once its
+    # sketched residual estimate drops to tol, so prism.iterations becomes
+    # a budget instead of a fixed cost.  None keeps fixed-iters chains.
+    # Threads into resolved_prism; per-leaf iters_used telemetry lands in
+    # the Muon/Shampoo state whenever a tol is set (matfn_telemetry).
+    matfn_tol: Optional[float] = None
     # dtype of the staleness caches carried in the optimizer state (Muon
     # "ortho", Shampoo "Linv"/"Rinv").  "auto" follows matfn_dtype —
     # bf16 halves cached optimizer state; sharding rules are unchanged
@@ -313,7 +339,17 @@ class OptimizerConfig:
             out = dataclasses.replace(out, dtype=self.matfn_dtype)
         if self.vmem_budget and self.vmem_budget != out.vmem_budget:
             out = dataclasses.replace(out, vmem_budget=self.vmem_budget)
+        if self.matfn_tol is not None and self.matfn_tol != out.tol:
+            out = dataclasses.replace(out, tol=self.matfn_tol)
         return out
+
+    @property
+    def matfn_telemetry(self) -> bool:
+        """True when the optimizer should carry per-leaf ``iters_used``
+        telemetry in its state (DESIGN.md §11): an adaptive tol is set
+        and the method actually runs fitted (certifiable) iterations."""
+        return (self.resolved_prism.tol is not None
+                and self.matfn_method == "prism")
 
     @property
     def matfn_precision(self) -> MatfnPrecision:

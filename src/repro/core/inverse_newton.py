@@ -28,8 +28,19 @@ from repro.core.newton_schulz import IterInfo, _fro, _mm
 def inv_proot(A: jax.Array, p: int, iters: int = 20, method: str = "prism",
               sketch_dim: int = 8, key: Optional[jax.Array] = None,
               dtype=jnp.float32, alpha_bounds: Optional[Tuple[float, float]] = None,
-              return_info: bool = False):
-    """A^{-1/p} for SPD A via (PRISM-)coupled inverse Newton."""
+              return_info: bool = False, tol: Optional[float] = None,
+              return_iters: bool = False):
+    """A^{-1/p} for SPD A via (PRISM-)coupled inverse Newton.
+
+    tol: adaptive early-stopping certificate (DESIGN.md §11): with
+      ``method="prism"`` the chain runs as one ``lax.while_loop`` that
+      freezes BOTH coupled iterates of a batch slice (bit-stably) once
+      its sketched est_r ~ ||I - M_k||_F drops to tol; ``iters`` becomes
+      a budget.  Classical inverse Newton (and ``return_info``) ignores
+      tol and runs the fixed count — it computes no sketched traces to
+      certify from.
+    return_iters: also return per-matrix ``iters_used`` (int32).
+    """
     in_dtype = A.dtype
     n = A.shape[-1]
     A32 = A.astype(dtype)
@@ -39,26 +50,55 @@ def inv_proot(A: jax.Array, p: int, iters: int = 20, method: str = "prism",
     lo, hi = alpha_bounds if alpha_bounds is not None else (1.0 / p, 2.0 / p)
     apoly = poly.inverse_newton_residual(p)
     eye = jnp.eye(n, dtype=dtype)
-    alphas, fros = [], []
-    for k in range(iters):
-        R = eye - M
-        if method == "prism":
-            kk = prism.alpha_schedule_key(key, k) if key is not None else None
-            a = prism.fit_alpha(R, apoly, lo, hi, key=kk, sketch_dim=sketch_dim)
-        else:
-            a = jnp.full(M.shape[:-2], 1.0 / p, dtype=jnp.float32)
-        if return_info:
-            alphas.append(a)
-            fros.append(_fro(R)[..., 0, 0])
+    batch = A.shape[:-2]
+    adaptive = tol is not None and method == "prism" and not return_info
+
+    def fit(R, k):
+        kk = prism.alpha_schedule_key(key, k) if key is not None else None
+        return prism.fit_alpha(R, apoly, lo, hi, key=kk,
+                               sketch_dim=sketch_dim, return_est_r=True)
+
+    def step(X_, M_, a):
         ab = a.astype(dtype)[..., None, None]
-        T = eye + ab * R
+        T = eye + ab * (eye - M_)
         # fp32-accumulated chain products (DESIGN.md §9)
-        X = _mm(X, T)
+        Xn = _mm(X_, T)
+        Mn = M_
         for _ in range(p):
-            M = _mm(T, M)
+            Mn = _mm(T, Mn)
+        return Xn, Mn
+
+    if adaptive:
+        def afit(it, k):
+            a, est = fit(eye - it["M"], k)
+            return None, a, est
+
+        def astep(it, _aux, a):
+            Xn, Mn = step(it["X"], it["M"], a)
+            return {"X": Xn, "M": Mn}
+
+        out_it, used = prism.adaptive_masked_loop(
+            {"X": X, "M": M}, afit, astep, tol, 0, iters, batch)
+        X = out_it["X"]
+    else:
+        alphas, fros = [], []
+        for k in range(iters):
+            R = eye - M
+            if method == "prism":
+                a, _ = fit(R, k)
+            else:
+                a = jnp.full(batch, 1.0 / p, dtype=jnp.float32)
+            if return_info:
+                alphas.append(a)
+                fros.append(_fro(R)[..., 0, 0])
+            X, M = step(X, M, a)
+        used = jnp.full(batch, iters, jnp.int32)
     # M_k = X_k^p A is invariant, so M_k -> I gives X_k -> A^{-1/p} directly;
     # the initial 1/c scaling needs no undoing.
     out = X.astype(in_dtype)
+    res = (out,)
     if return_info:
-        return out, IterInfo(jnp.stack(alphas), jnp.stack(fros))
-    return out
+        res = res + (IterInfo(jnp.stack(alphas), jnp.stack(fros)),)
+    if return_iters:
+        res = res + (used,)
+    return res if len(res) > 1 else res[0]

@@ -18,6 +18,28 @@ cfg-free families) is the COMPUTE dtype threaded into every iteration;
 accumulation and the PRISM alpha fit are pinned fp32 by MatfnPrecision.
 The LAPACK baselines (svd / eigh / solve / DB-Newton's Cholesky) always
 run fp32 — bf16 inputs upcast in, results round back out.
+
+Adaptive early stopping (DESIGN.md §11): ``cfg.tol`` (or the ``tol``
+kwarg of the cfg-free families) turns the fixed iteration count into a
+BUDGET for every prism-fitted chain — each fitted step reads the
+certificate est_r ~ ||R_k||_F off the sketched trace chain it already
+computes, and a batch slice freezes (bit-stably) the moment it
+certifies.  Caveats, uniform across families:
+  * the certificate is an unbiased sketch ESTIMATE (relative std
+    ~sqrt(2/sketch_dim)), not a bound — a slice can certify with its
+    true ||R||_F slightly above tol; ``sketch_dim=0`` (exact traces)
+    makes the certificate exact at O(n^3) per check;
+  * tol=None (default) reproduces the pre-§11 fixed-``iters`` chains
+    bit-for-bit, stays reverse-differentiable (lax.while_loop is not),
+    and is what ``return_info`` diagnostics always use;
+  * classical (fit-free) methods compute no traces and therefore run
+    their fixed schedule regardless of tol.
+Every NS-family entry point accepts ``return_iters=True`` to append the
+per-matrix realized iteration counts (int32, shape ``A.shape[:-2]``).
+
+Config aliasing: entry points default ``cfg=None`` and construct a fresh
+``PrismConfig()`` per call — there is no module-level shared default
+instance for callers to alias (or observe each other through).
 """
 from __future__ import annotations
 
@@ -33,70 +55,139 @@ from repro.core import newton as _newton
 from repro.core import newton_schulz as _ns
 from repro.core import polar_express as _pe
 
-_DEF = PrismConfig()
+
+def _telemetry_shim(out, A, kw, method: str):
+    """Uniform telemetry contract for methods without fitted iterations
+    (LA oracles, fixed-schedule baselines): ``return_iters`` appends
+    zeros — they certify nothing, matching optim/shampoo's convention —
+    and ``return_info`` (a per-iteration trajectory these methods never
+    produce) raises instead of silently returning garbage.  MUTATES kw
+    (pops the telemetry keys) so remaining kwargs can pass through."""
+    if kw.pop("return_info", False):
+        raise ValueError(f"return_info is not supported by "
+                         f"method={method!r} (no iteration trajectory)")
+    if kw.pop("return_iters", False):
+        return out, jnp.zeros(A.shape[:-2], jnp.int32)
+    return out
 
 
-def polar(A: jax.Array, method: str = "prism", cfg: PrismConfig = _DEF,
+def _run_fixed_schedule(fn, A, kw):
+    """Run a fixed-schedule (fit-free) iteration family that supports
+    ``return_info`` but not ``return_iters`` (polar_express, DB-newton):
+    pops return_iters and appends zero counts FLAT after the family's
+    (out[, info]) result, keeping the documented (out[, info][, iters])
+    shape."""
+    ri = kw.pop("return_iters", False)
+    res = fn(**kw)
+    if not ri:
+        return res
+    zeros = jnp.zeros(A.shape[:-2], jnp.int32)
+    if kw.get("return_info"):
+        return res + (zeros,)  # res is already (out, info)
+    return res, zeros
+
+
+def polar(A: jax.Array, method: str = "prism",
+          cfg: Optional[PrismConfig] = None,
           iters: Optional[int] = None, key: Optional[jax.Array] = None,
           **kw):
-    """Polar factor U V^T (orthogonalization) of A [..., m, n]."""
+    """Polar factor U V^T (orthogonalization) of A [..., m, n].
+
+    kw passthrough (NS family): ``return_info``, ``return_iters``,
+    ``n_real`` — see ``newton_schulz.polar``.  ``cfg.tol`` enables
+    adaptive early stopping (module docstring).
+    """
+    cfg = PrismConfig() if cfg is None else cfg
     if method == "svd":
         U, _, Vt = jnp.linalg.svd(A.astype(jnp.float32), full_matrices=False)
-        return (U @ Vt).astype(A.dtype)
+        return _telemetry_shim((U @ Vt).astype(A.dtype), A, kw, method)
     if method == "polar_express":
         kw.setdefault("dtype", cfg.dtype)
-        return _pe.polar(A, iters=iters or 8, **kw)
+        return _run_fixed_schedule(
+            lambda **k: _pe.polar(A, iters=iters or 8, **k), A, kw)
     return _ns.polar(A, cfg=cfg, method=method, iters=iters, key=key, **kw)
 
 
-def sqrtm(A: jax.Array, method: str = "prism", cfg: PrismConfig = _DEF,
+def sqrtm(A: jax.Array, method: str = "prism",
+          cfg: Optional[PrismConfig] = None,
           iters: Optional[int] = None, key: Optional[jax.Array] = None,
           **kw):
-    """(A^{1/2}, A^{-1/2}) for symmetric PSD A."""
+    """(A^{1/2}, A^{-1/2}) for symmetric PSD A.
+
+    kw passthrough (NS family): ``return_info``, ``return_iters``;
+    ``cfg.tol`` freezes both coupled iterates per slice on certification
+    (module docstring).
+    """
+    cfg = PrismConfig() if cfg is None else cfg
     if method == "eigh":
         w, V = jnp.linalg.eigh(A.astype(jnp.float32))
         w = jnp.maximum(w, 0.0)
         s = jnp.sqrt(w)
         si = jnp.where(s > 0, 1.0 / jnp.maximum(s, 1e-30), 0.0)
         Vt = jnp.swapaxes(V, -1, -2)
-        return ((V * s[..., None, :]) @ Vt).astype(A.dtype), \
-            ((V * si[..., None, :]) @ Vt).astype(A.dtype)
+        out = (((V * s[..., None, :]) @ Vt).astype(A.dtype),
+               ((V * si[..., None, :]) @ Vt).astype(A.dtype))
+        return _telemetry_shim(out, A, kw, method)
     if method == "polar_express":
         kw.setdefault("dtype", cfg.dtype)
-        return _pe.sqrtm(A, iters=iters or 8, **kw)
-    if method == "newton":
-        return _newton.sqrtm(A, iters=iters or 12, method="prism", **kw)
-    if method == "newton_classical":
-        return _newton.sqrtm(A, iters=iters or 12, method="newton", **kw)
+        return _run_fixed_schedule(
+            lambda **k: _pe.sqrtm(A, iters=iters or 8, **k), A, kw)
+    if method in ("newton", "newton_classical"):
+        return _run_fixed_schedule(
+            lambda **k: _newton.sqrtm(
+                A, iters=iters or 12,
+                method="prism" if method == "newton" else "newton", **k),
+            A, kw)
     return _ns.sqrtm(A, cfg=cfg, method=method, iters=iters, key=key, **kw)
 
 
 def inv_sqrtm(A: jax.Array, method: str = "prism", **kw):
-    """A^{-1/2} for symmetric PSD A (coupled-iteration Y output)."""
+    """A^{-1/2} for symmetric PSD A (coupled-iteration Y output).
+
+    With ``return_info``/``return_iters`` the telemetry rides along:
+    returns (A^{-1/2}[, info][, iters_used]).
+    """
     if method == "inverse_newton":
         return _invnewton.inv_proot(A, p=2, **kw)
-    return sqrtm(A, method=method, **kw)[1]
+    res = sqrtm(A, method=method, **kw)
+    if kw.get("return_info") or kw.get("return_iters"):
+        return (res[0][1],) + tuple(res[1:])
+    return res[1]
 
 
-def signm(A: jax.Array, method: str = "prism", cfg: PrismConfig = _DEF,
+def signm(A: jax.Array, method: str = "prism",
+          cfg: Optional[PrismConfig] = None,
           iters: Optional[int] = None, key: Optional[jax.Array] = None,
           **kw):
-    """sign(A) for A with A^2 symmetric."""
+    """sign(A) for A with A^2 symmetric.
+
+    kw passthrough (NS family): ``return_info``, ``return_iters``;
+    ``cfg.tol`` enables adaptive early stopping (module docstring).
+    """
+    cfg = PrismConfig() if cfg is None else cfg
     if method == "eigh":
         w, V = jnp.linalg.eigh(A.astype(jnp.float32))
         Vt = jnp.swapaxes(V, -1, -2)
-        return ((V * jnp.sign(w)[..., None, :]) @ Vt).astype(A.dtype)
+        out = ((V * jnp.sign(w)[..., None, :]) @ Vt).astype(A.dtype)
+        return _telemetry_shim(out, A, kw, method)
     return _ns.signm(A, cfg=cfg, method=method, iters=iters, key=key, **kw)
 
 
 def inv(A: jax.Array, method: str = "prism_chebyshev",
         iters: Optional[int] = None, key: Optional[jax.Array] = None, **kw):
-    """A^{-1} for full-rank square A."""
+    """A^{-1} for full-rank square A.
+
+    kw passthrough (Chebyshev family): ``tol`` (adaptive early stopping
+    for the prism method — module docstring), ``return_iters``,
+    ``return_info``, ``dtype``, ``sketch_dim``, ``alpha_bounds``.
+    """
     if method == "solve":
+        kw.pop("tol", None)  # no iterations to stop early
         A32 = A.astype(jnp.float32)
         eye = jnp.broadcast_to(jnp.eye(A.shape[-1], dtype=jnp.float32),
                                A.shape)
-        return jnp.linalg.solve(A32, eye).astype(A.dtype)
+        return _telemetry_shim(jnp.linalg.solve(A32, eye).astype(A.dtype),
+                               A, kw, method)
     if method == "inverse_newton":
         return _invnewton.inv_proot(A, p=1, iters=iters or 20, key=key, **kw)
     m = "prism" if method == "prism_chebyshev" else "chebyshev"
@@ -108,12 +199,19 @@ def inv(A: jax.Array, method: str = "prism_chebyshev",
 def inv_proot(A: jax.Array, p: int, method: str = "prism",
               iters: Optional[int] = None, key: Optional[jax.Array] = None,
               **kw):
-    """A^{-1/p} for SPD A."""
+    """A^{-1/p} for SPD A.
+
+    kw passthrough (inverse-Newton family): ``tol`` (adaptive early
+    stopping for the prism method — module docstring), ``return_iters``,
+    ``return_info``, ``dtype``, ``sketch_dim``, ``alpha_bounds``.
+    """
     if method == "eigh":
+        kw.pop("tol", None)  # no iterations to stop early
         w, V = jnp.linalg.eigh(A.astype(jnp.float32))
         w = jnp.maximum(w, 1e-30)
         Vt = jnp.swapaxes(V, -1, -2)
-        return ((V * (w ** (-1.0 / p))[..., None, :]) @ Vt).astype(A.dtype)
+        out = ((V * (w ** (-1.0 / p))[..., None, :]) @ Vt).astype(A.dtype)
+        return _telemetry_shim(out, A, kw, method)
     meth = "prism" if method == "prism" else "classical"
     return _invnewton.inv_proot(A, p=p, iters=iters or 20, method=meth,
                                 key=key, **kw)

@@ -26,6 +26,17 @@ then the fused d-GEMM Horner application — the closed-form alpha
 minimization runs between them in XLA, which is exactly why the fit
 phase cannot fuse across iterations (alpha_{k+1} needs the traces of
 R_{k+1}).
+
+Adaptive early stopping (DESIGN.md §11): with ``cfg.tol`` set, each
+maximal run of fitted iterations becomes one ``lax.while_loop`` whose
+body is a single fitted iteration plus a per-matrix convergence mask —
+the certificate est_r ~ ||R_k||_F is read off the trace chain the fit
+already computes (prism.fit_alpha_from_traces), converged [B, n, n]
+slices freeze bit-stably, and the loop exits when the slowest slice
+certifies.  ``iterations`` is then a budget; the realized per-matrix
+counts surface through ``return_iters``.  tol=None (default) keeps the
+fully-unrolled static chains (and is required for reverse-mode autodiff
+through the iteration, which lax.while_loop does not support).
 """
 from __future__ import annotations
 
@@ -158,21 +169,28 @@ def _static_alpha(k: int, cfg: PrismConfig, method: str) -> Optional[float]:
 
 def _phase_plan(iters: int, cfg: PrismConfig,
                 method: str) -> List[Tuple[str, object]]:
-    """[("warm", (a_0, ..)), ("fit", k), ...] — maximal runs of
-    static-alpha iterations become single warm phases."""
+    """[("warm", (a_0, ..)), ("fit", (k0, count)), ...] — maximal runs
+    of static-alpha iterations become single warm phases (one fused
+    launch, §10) and maximal runs of consecutive FITTED iterations
+    become single fit phases.  A fit phase unrolls statically
+    (``cfg.tol is None``: count data-independent iterations, the
+    pre-§11 behavior) or runs as ONE ``lax.while_loop`` with per-matrix
+    convergence masks (``cfg.tol`` set): ``count`` is then the budget,
+    not the cost."""
     phases: List[Tuple[str, object]] = []
-    run: List[float] = []
     for k in range(iters):
         a = _static_alpha(k, cfg, method)
         if a is None:
-            if run:
-                phases.append(("warm", tuple(run)))
-                run = []
-            phases.append(("fit", k))
+            if phases and phases[-1][0] == "fit":
+                k0, count = phases[-1][1]
+                phases[-1] = ("fit", (k0, count + 1))
+            else:
+                phases.append(("fit", (k, 1)))
         else:
-            run.append(a)
-    if run:
-        phases.append(("warm", tuple(run)))
+            if phases and phases[-1][0] == "warm":
+                phases[-1] = ("warm", phases[-1][1] + (a,))
+            else:
+                phases.append(("warm", (a,)))
     return phases
 
 
@@ -208,32 +226,106 @@ def _fused_fit_step(X, cfg: PrismConfig, k: int, key, n_real,
     return kops.apply_g(X, R, a, degree=cfg.degree, Y=Y)
 
 
+def _adaptive_fit_run(X, Y, cfg: PrismConfig, k0: int, count: int, key,
+                      n_real, family: str, residual_fn, fused: bool):
+    """A maximal run of fitted iterations as ONE ``lax.while_loop`` with
+    per-matrix convergence masks (DESIGN.md §11).
+
+    Every loop step reads the certificate est_r ~ ||R_k||_F off the same
+    sketched trace chain the alpha fit consumes (zero extra launches) and
+    freezes any batch slice with est_r <= cfg.tol: frozen slices pass
+    through a masked identity update (``jnp.where`` on the untouched
+    iterate — bitwise-stable) while stragglers keep iterating.  The loop
+    exits when the SLOWEST slice certifies or the ``count`` budget runs
+    out.  Returns (X, Y, used) with ``used`` the per-slice number of
+    updates actually applied (shape ``X.shape[:-2]``, int32).
+
+    The §10 launch contracts survive unchanged: the loop body is the
+    body of one fitted iteration — 2 launches on the fused tier, 2+d on
+    the §7 tier — issued per RUNTIME iteration, while a single trace of
+    the while_loop (what ``ops.count_launches`` counts) contains the
+    body once, independent of the budget and of the data.
+    """
+    coupled = Y is not None
+    apoly = poly.newton_schulz_residual(cfg.degree)
+    lo, hi = cfg.bounds
+    n = X.shape[-1]
+    use_fused_fit = fused and key is not None and cfg.sketch_dim > 0
+    if fused:
+        from repro.kernels import ops as kops
+
+    def fit(it, k):
+        """(R, alpha, est_r) for iteration k (k is traced)."""
+        X_, Y_ = it["X"], it.get("Y")
+        if use_fused_fit:
+            S = sk.gaussian_sketch(prism.alpha_schedule_key(key, k),
+                                   cfg.sketch_dim, n, dtype=X_.dtype)
+            R, t = kops.residual_chain(X_, S, poly.max_trace_power(apoly),
+                                       family=family, Y=Y_)
+            a, est = prism.fit_alpha_from_traces(t, apoly, lo, hi, S=S,
+                                                 n_real=n_real,
+                                                 return_est_r=True)
+            return R, a, est
+        R = residual_fn(X_, Y_)
+        kk = prism.alpha_schedule_key(key, k) if key is not None else None
+        a, est = prism.fit_alpha(R, apoly, lo, hi, key=kk,
+                                 sketch_dim=cfg.sketch_dim,
+                                 use_kernels=cfg.use_kernels,
+                                 n_real=n_real,
+                                 vmem_budget=cfg.vmem_budget,
+                                 return_est_r=True)
+        return R, a, est
+
+    def step(it, R, a):
+        X_, Y_ = it["X"], it.get("Y")
+        if fused:
+            out = kops.apply_g(X_, R, a, degree=cfg.degree, Y=Y_)
+            Xn, Yn = out if coupled else (out, None)
+        else:
+            Xn = apply_g(X_, R, a, cfg.degree, "right", cfg.use_kernels)
+            Yn = apply_g(Y_, R, a, cfg.degree, "left",
+                         cfg.use_kernels) if coupled else None
+        return {"X": Xn, "Y": Yn} if coupled else {"X": Xn}
+
+    iterates = {"X": X, "Y": Y} if coupled else {"X": X}
+    out, used = prism.adaptive_masked_loop(iterates, fit, step, cfg.tol,
+                                           k0, count, X.shape[:-2])
+    return out["X"], out.get("Y", Y), used
+
+
 def _run_phases(X, cfg: PrismConfig, method: str, iters: int, key,
                 return_info: bool, family: str, residual_fn,
                 Y=None, n_real=None):
-    """Shared warm/fit phase driver for the three NS families (§10).
+    """Shared warm/fit phase driver for the three NS families (§10/§11).
 
     ``residual_fn(X, Y)`` computes the family residual on the unfused
     path; ``Y`` is non-None only for the coupled sqrt family (both
-    iterates then update per phase).  Returns (X, Y, alphas, fros) with
-    the info lists populated only under ``return_info`` (which disables
-    the fused tier — see _fused_tier).
+    iterates then update per phase).  Returns (X, Y, alphas, fros,
+    iters_used): the info lists are populated only under ``return_info``
+    (which disables the fused tier — see _fused_tier — and the adaptive
+    engine, whose per-iteration quantities a dynamic loop cannot stack);
+    ``iters_used`` is the per-matrix count of applied updates, shape
+    ``X.shape[:-2]`` — the static total unless ``cfg.tol`` turns the fit
+    phases adaptive (§11).
     """
     coupled = Y is not None
     fused = _fused_tier(cfg, X.shape[-2:], return_info, coupled=coupled)
     if fused:
         from repro.kernels import ops as kops
     alphas, fros = [], []
+    iters_used = jnp.zeros(X.shape[:-2], jnp.int32)
+    adaptive = cfg.tol is not None and not return_info
 
     def unpack(out):
         return out if coupled else (out, Y)
 
     for kind, payload in _phase_plan(iters, cfg, method):
-        if kind == "warm" and fused:
-            X, Y = unpack(kops.warm_tail(X, payload, degree=cfg.degree,
-                                         family=family, Y=Y))
-            continue
         if kind == "warm":
+            iters_used = iters_used + len(payload)
+            if fused:
+                X, Y = unpack(kops.warm_tail(X, payload, degree=cfg.degree,
+                                             family=family, Y=Y))
+                continue
             for a in payload:
                 R = residual_fn(X, Y)
                 aa = jnp.full(R.shape[:-2], a, dtype=jnp.float32)
@@ -245,23 +337,33 @@ def _run_phases(X, cfg: PrismConfig, method: str, iters: int, key,
                     alphas.append(aa)
                     fros.append(_fro(R)[..., 0, 0])
             continue
-        k = payload
-        if fused and key is not None and cfg.sketch_dim > 0:
-            X, Y = unpack(_fused_fit_step(X, cfg, k, key, n_real, family,
-                                          Y=Y))
+        k0, count = payload
+        if adaptive:
+            X, Y, used = _adaptive_fit_run(X, Y, cfg, k0, count, key,
+                                           n_real, family, residual_fn,
+                                           fused)
+            iters_used = iters_used + used
             continue
-        R = residual_fn(X, Y)
-        a = _resolve_alpha(k, R, cfg, method, key, n_real=n_real)
-        if fused:
-            X, Y = unpack(kops.apply_g(X, R, a, degree=cfg.degree, Y=Y))
-        else:
-            X = apply_g(X, R, a, cfg.degree, "right", cfg.use_kernels)
-            if coupled:
-                Y = apply_g(Y, R, a, cfg.degree, "left", cfg.use_kernels)
-        if return_info:
-            alphas.append(a)
-            fros.append(_fro(R)[..., 0, 0])
-    return X, Y, alphas, fros
+        for k in range(k0, k0 + count):
+            iters_used = iters_used + 1
+            if fused and key is not None and cfg.sketch_dim > 0:
+                X, Y = unpack(_fused_fit_step(X, cfg, k, key, n_real,
+                                              family, Y=Y))
+                continue
+            R = residual_fn(X, Y)
+            a = _resolve_alpha(k, R, cfg, method, key, n_real=n_real)
+            if fused:
+                X, Y = unpack(kops.apply_g(X, R, a, degree=cfg.degree,
+                                           Y=Y))
+            else:
+                X = apply_g(X, R, a, cfg.degree, "right", cfg.use_kernels)
+                if coupled:
+                    Y = apply_g(Y, R, a, cfg.degree, "left",
+                                cfg.use_kernels)
+            if return_info:
+                alphas.append(a)
+                fros.append(_fro(R)[..., 0, 0])
+    return X, Y, alphas, fros, iters_used
 
 
 # ---------------------------------------------------------------------------
@@ -269,10 +371,21 @@ def _run_phases(X, cfg: PrismConfig, method: str, iters: int, key,
 # ---------------------------------------------------------------------------
 
 
-def polar(A: jax.Array, cfg: PrismConfig = PrismConfig(),
+def _with_telemetry(out, info, iters_used, return_info, return_iters):
+    """(out[, IterInfo][, iters_used]) per the two telemetry flags."""
+    res = (out,)
+    if return_info:
+        alphas, fros = info
+        res = res + (IterInfo(jnp.stack(alphas), jnp.stack(fros)),)
+    if return_iters:
+        res = res + (iters_used,)
+    return res if len(res) > 1 else res[0]
+
+
+def polar(A: jax.Array, cfg: Optional[PrismConfig] = None,
           method: str = "prism", iters: Optional[int] = None,
           key: Optional[jax.Array] = None, return_info: bool = False,
-          n_real: Optional[jax.Array] = None):
+          n_real: Optional[jax.Array] = None, return_iters: bool = False):
     """Polar factor U V^T of A [..., m, n] via (PRISM-)Newton-Schulz.
 
     method: "prism" | "newton_schulz" (classical Taylor alpha).
@@ -281,20 +394,24 @@ def polar(A: jax.Array, cfg: PrismConfig = PrismConfig(),
       fit exactly ignore the padding (see prism.fit_alpha).  Zero-padding
       itself is exact for the iterations: pad rows/cols of X stay zero and
       the real block evolves as if unpadded.
+    return_iters: also return ``iters_used`` — the per-matrix number of
+      iterations actually applied, shape ``A.shape[:-2]`` (int32).  Equals
+      ``iters`` unless ``cfg.tol`` enables adaptive early stopping
+      (DESIGN.md §11), where converged slices freeze early.
     """
+    cfg = PrismConfig() if cfg is None else cfg
     iters = cfg.iterations if iters is None else iters
     transpose = A.shape[-2] < A.shape[-1]
     X = jnp.swapaxes(A, -1, -2) if transpose else A
     in_dtype = X.dtype
     X = X.astype(cfg.dtype) / _fro(X).astype(cfg.dtype)
-    X, _, alphas, fros = _run_phases(
+    X, _, alphas, fros, used = _run_phases(
         X, cfg, method, iters, key, return_info, "polar",
         lambda x, y: _gram_residual(x, cfg.use_kernels), n_real=n_real)
     X = jnp.swapaxes(X, -1, -2) if transpose else X
     X = X.astype(in_dtype)
-    if return_info:
-        return X, IterInfo(jnp.stack(alphas), jnp.stack(fros))
-    return X
+    return _with_telemetry(X, (alphas, fros), used, return_info,
+                           return_iters)
 
 
 # ---------------------------------------------------------------------------
@@ -312,26 +429,31 @@ def _coupled_residual(X, Y, use_kernels: bool):
     return 0.5 * (R + jnp.swapaxes(R, -1, -2))  # stability: re-symmetrize
 
 
-def sqrtm(A: jax.Array, cfg: PrismConfig = PrismConfig(),
+def sqrtm(A: jax.Array, cfg: Optional[PrismConfig] = None,
           method: str = "prism", iters: Optional[int] = None,
-          key: Optional[jax.Array] = None, return_info: bool = False):
+          key: Optional[jax.Array] = None, return_info: bool = False,
+          return_iters: bool = False):
     """(A^{1/2}, A^{-1/2}) for symmetric PSD A via coupled (PRISM-)NS.
 
     Normalizes by ||A||_F (so spectrum in (0, 1]) and rescales the outputs.
+    ``return_iters`` appends the per-matrix ``iters_used`` telemetry (see
+    ``polar``); with ``cfg.tol`` set, BOTH coupled iterates freeze
+    together once the slice's certificate est_r ~ ||I - Y X||_F clears
+    tol (DESIGN.md §11).
     """
+    cfg = PrismConfig() if cfg is None else cfg
     iters = cfg.iterations if iters is None else iters
     in_dtype = A.dtype
     c = _fro(A).astype(cfg.dtype)
     X = A.astype(cfg.dtype) / c
     Y = jnp.broadcast_to(_eye_like(X), X.shape)
-    X, Y, alphas, fros = _run_phases(
+    X, Y, alphas, fros, used = _run_phases(
         X, cfg, method, iters, key, return_info, "sqrt",
         lambda x, y: _coupled_residual(x, y, cfg.use_kernels), Y=Y)
     sqrt_c = jnp.sqrt(c)
     out = (X * sqrt_c).astype(in_dtype), (Y / sqrt_c).astype(in_dtype)
-    if return_info:
-        return out, IterInfo(jnp.stack(alphas), jnp.stack(fros))
-    return out
+    return _with_telemetry(out, (alphas, fros), used, return_info,
+                           return_iters)
 
 
 # ---------------------------------------------------------------------------
@@ -339,17 +461,20 @@ def sqrtm(A: jax.Array, cfg: PrismConfig = PrismConfig(),
 # ---------------------------------------------------------------------------
 
 
-def signm(A: jax.Array, cfg: PrismConfig = PrismConfig(),
+def signm(A: jax.Array, cfg: Optional[PrismConfig] = None,
           method: str = "prism", iters: Optional[int] = None,
-          key: Optional[jax.Array] = None, return_info: bool = False):
-    """sign(A) for A with A^2 symmetric and ||A||_2 <= 1 after ||.||_F scaling."""
+          key: Optional[jax.Array] = None, return_info: bool = False,
+          return_iters: bool = False):
+    """sign(A) for A with A^2 symmetric and ||A||_2 <= 1 after ||.||_F
+    scaling.  ``return_iters`` appends per-matrix ``iters_used`` (see
+    ``polar``)."""
+    cfg = PrismConfig() if cfg is None else cfg
     iters = cfg.iterations if iters is None else iters
     in_dtype = A.dtype
     X = A.astype(cfg.dtype) / _fro(A).astype(cfg.dtype)
-    X, _, alphas, fros = _run_phases(
+    X, _, alphas, fros, used = _run_phases(
         X, cfg, method, iters, key, return_info, "sign",
         lambda x, y: _eye_like(x) - _mm(x, x, cfg.use_kernels))
     X = X.astype(in_dtype)
-    if return_info:
-        return X, IterInfo(jnp.stack(alphas), jnp.stack(fros))
-    return X
+    return _with_telemetry(X, (alphas, fros), used, return_info,
+                           return_iters)

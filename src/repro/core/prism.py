@@ -33,7 +33,8 @@ def fit_alpha(
     use_kernels: bool = False,
     n_real: Optional[jax.Array] = None,
     vmem_budget: int = 0,
-) -> jax.Array:
+    return_est_r: bool = False,
+):
     """alpha~_k = argmin_{alpha in [lo, hi]} || S h(R; alpha) ||_F^2.
 
     Args:
@@ -54,8 +55,11 @@ def fit_alpha(
       vmem_budget: override (bytes) for the chain kernel's VMEM guard on
         the use_kernels path (DESIGN.md §10); threaded from
         PrismConfig.vmem_budget by resolve_alpha.
+      return_est_r: also return the convergence certificate est_r (see
+        ``fit_alpha_from_traces``) read off the same trace chain.
 
-    Returns alpha with shape R.shape[:-2].
+    Returns alpha with shape R.shape[:-2]; with ``return_est_r`` the
+    tuple (alpha, est_r), est_r of the same shape (fp32).
     """
     n = R.shape[-1]
     max_pow = poly.max_trace_power(apoly)
@@ -74,11 +78,13 @@ def fit_alpha(
             # exact traces: the I_pad block adds (n - n_real) to every tr(R^i)
             pad_tr = (n - n_real).astype(jnp.float32)
             t = t - pad_tr[..., None]
-        return fit_alpha_from_traces(t, apoly, lo, hi)
+        return fit_alpha_from_traces(t, apoly, lo, hi,
+                                     return_est_r=return_est_r)
     S = sk.gaussian_sketch(key, sketch_dim, n, dtype=R.dtype)
     t = sk.sketched_power_traces(R, S, max_pow, use_kernels=use_kernels,
                                  vmem_budget=vmem_budget)
-    return fit_alpha_from_traces(t, apoly, lo, hi, S=S, n_real=n_real)
+    return fit_alpha_from_traces(t, apoly, lo, hi, S=S, n_real=n_real,
+                                 return_est_r=return_est_r)
 
 
 def sketch_pad_trace_correction(S: jax.Array, n_real: jax.Array) -> jax.Array:
@@ -100,7 +106,8 @@ def fit_alpha_from_traces(
     hi: float,
     S: Optional[jax.Array] = None,
     n_real: Optional[jax.Array] = None,
-) -> jax.Array:
+    return_est_r: bool = False,
+):
     """Closed-form alpha fit from PRECOMPUTED power traces.
 
     The back half of ``fit_alpha``, split out so the fused
@@ -109,12 +116,28 @@ def fit_alpha_from_traces(
     the identical W-map + constrained minimization.  ``t`` holds powers
     0..max_trace_power (fp32); with ``n_real`` the sketched pad-trace
     correction (requires ``S``) is applied first.
+
+    ``return_est_r`` additionally returns the convergence certificate
+
+        est_r = sqrt(max(t_2, 0)),   t_2 = tr(S R^2 S^T)  (pad-corrected)
+
+    — an unbiased estimate of ||R||_F for symmetric R (E[S^T S] = I for
+    the N(0, 1/p) sketch), read off the SAME trace chain the fit already
+    consumed, so a per-iteration stopping certificate costs zero extra
+    launches (DESIGN.md §11).  fp32 end-to-end like the fit itself; the
+    §7 n_real correction keeps it exact for zero-padded bucket slices.
+    With exact traces (sketch_dim=0) est_r == ||R||_F exactly; with a
+    p-row sketch its relative std is ~sqrt(2/p) — a certificate, not a
+    bound (see PrismConfig.tol).
     """
     if n_real is not None:
         t = t - sketch_pad_trace_correction(S, n_real)[..., None]
     W = jnp.asarray(poly.trace_weight_matrix(apoly), dtype=jnp.float32)
     coeffs = jnp.einsum("ki,...i->...k", W, t)
-    return poly.minimize_alpha_poly(coeffs, lo, hi)
+    alpha = poly.minimize_alpha_poly(coeffs, lo, hi)
+    if return_est_r:
+        return alpha, jnp.sqrt(jnp.maximum(t[..., 2], 0.0))
+    return alpha
 
 
 def objective_value(R: jax.Array, apoly: poly.AlphaPoly, alpha) -> jax.Array:
@@ -129,6 +152,58 @@ def objective_value(R: jax.Array, apoly: poly.AlphaPoly, alpha) -> jax.Array:
 def alpha_schedule_key(key: jax.Array, k: jax.Array) -> jax.Array:
     """Per-iteration sketch key (fresh S_k each iteration, as in Thm 2)."""
     return jax.random.fold_in(key, k)
+
+
+def adaptive_masked_loop(iterates, fit, step, tol: float, k0: int,
+                         budget: int, batch):
+    """The §11 certify-then-freeze loop driver, shared by every adaptive
+    iteration family (newton_schulz fit runs, chebyshev, inverse newton).
+
+    Runs ``lax.while_loop`` over iteration index k in [k0, k0+budget):
+
+      aux, alpha, est_r = fit(iterates, k)     # reads the certificate
+      done |= est_r <= tol                     # certify BEFORE updating
+      new = step(iterates, aux, alpha)         # one family iteration
+      iterates = where(~done, new, iterates)   # frozen slices: bitwise
+
+    exiting when every batch slice is certified or the budget runs out.
+
+    Args:
+      iterates: dict of same-batch [..., n, n] iterate arrays (e.g.
+        {"X": X} or the coupled {"X": X, "Y": Y} / {"X": X, "M": M}).
+      fit: (iterates, k) -> (aux, alpha, est_r); ``aux`` is whatever
+        ``step`` needs (typically the residual R), est_r fp32 of shape
+        ``batch``.
+      step: (iterates, aux, alpha) -> dict of updated iterates.
+      tol, k0, budget: certificate threshold and the static run bounds.
+      batch: the shared leading batch shape of every iterate.
+
+    Returns (iterates, used): the frozen/final iterates and the int32
+    per-slice count of updates actually applied.
+    """
+    names = tuple(iterates)
+
+    def cond(c):
+        return (c["k"] < k0 + budget) & ~jnp.all(c["done"])
+
+    def body(c):
+        cur = {n: c[n] for n in names}
+        aux, a, est = fit(cur, c["k"])
+        done = c["done"] | (est <= tol)
+        active = ~done
+        new = step(cur, aux, a)
+        mask = active[..., None, None]
+        out = dict(c, k=c["k"] + 1, done=done,
+                   used=c["used"] + active.astype(jnp.int32))
+        for n in names:
+            out[n] = jnp.where(mask, new[n], c[n])
+        return out
+
+    carry = dict(iterates, k=jnp.asarray(k0, jnp.int32),
+                 done=jnp.zeros(batch, bool),
+                 used=jnp.zeros(batch, jnp.int32))
+    out = jax.lax.while_loop(cond, body, carry)
+    return {n: out[n] for n in names}, out["used"]
 
 
 def resolve_alpha(

@@ -29,6 +29,12 @@ those paths bucket exact shapes only.
 The plan is pure Python over static shapes — it runs at trace time and
 costs nothing inside jit.
 
+Adaptive early stopping (DESIGN.md §11): with a resolved ``tol`` the
+batched call per bucket runs only until its slowest slice certifies;
+``polar_bucketed(with_iters=True)`` / ``transform_bucketed(
+with_aux=True)`` scatter the realized per-slice iteration counts back
+per view for the optimizers' telemetry state.
+
 Mesh-sharded dispatch (DESIGN.md §8): a batched bucket call is exact
 per-slice math — per-slice Frobenius normalization and a per-slice alpha
 fit against a sketch S shared only through the PRNG key — so the batch
@@ -161,6 +167,15 @@ def scatter_bucket(bucket: Bucket, batch: jax.Array,
         outs[e.index] = sl.reshape(e.lead + e.mshape)
 
 
+def scatter_bucket_aux(bucket: Bucket, aux: jax.Array,
+                       outs: List[Optional[jax.Array]]) -> None:
+    """Split a per-slice companion [B, ...] (e.g. the §11 ``iters_used``
+    telemetry) back into per-view arrays of the views' lead shapes."""
+    for e in bucket.entries:
+        sl = aux[e.offset:e.offset + e.count]
+        outs[e.index] = sl.reshape(e.lead + sl.shape[1:])
+
+
 def _gram_real_dims(bucket: Bucket) -> jax.Array:
     """Per-slice real extent of the polar Gram dimension, shape [B].
 
@@ -224,7 +239,8 @@ def mesh_batch_axes(cfg: Optional[OptimizerConfig]):
 def shard_over_batch(fn: Callable, mesh, axes: Tuple[str, ...],
                      stacked: jax.Array,
                      slice_args: Sequence[jax.Array] = (),
-                     slice_pads: Sequence = ()) -> jax.Array:
+                     slice_pads: Sequence = (),
+                     out_ranks: Optional[Tuple[int, ...]] = None):
     """Run ``fn(stacked, *slice_args)`` with the leading batch dim
     partitioned over mesh ``axes`` via shard_map; all-gather the result.
 
@@ -235,6 +251,15 @@ def shard_over_batch(fn: Callable, mesh, axes: Tuple[str, ...],
     path normalizes and fits per slice, so pad slices run finite,
     self-contained chains that cannot perturb the real ones and are
     sliced away after the gather.
+
+    ``out_ranks``: when fn returns a TUPLE of batch-leading arrays (the
+    §11 telemetry path returns (O [B, M, N], iters_used [B])), gives each
+    output's rank so the shard_map out_specs can be built; every output
+    is all-gathered over the batch dim and un-padded.  None (default)
+    keeps the single-array contract.  Note the §11 while_loops run
+    PER-SHARD under this partitioning: each device iterates only until
+    its own slowest slice certifies — adaptivity composes with §8
+    sharding for free.
     """
     from jax.sharding import PartitionSpec as P
 
@@ -254,36 +279,52 @@ def shard_over_batch(fn: Callable, mesh, axes: Tuple[str, ...],
     ax = axes if len(axes) > 1 else axes[0]
 
     def local(x, *extras):
-        return jax.lax.all_gather(fn(x, *extras), ax, axis=0, tiled=True)
+        return jax.tree.map(
+            lambda o: jax.lax.all_gather(o, ax, axis=0, tiled=True),
+            fn(x, *extras))
 
     def batch_spec(r):
         return P(*((ax,) + (None,) * (r - 1)))
 
+    out_specs = (P(*((None,) * stacked.ndim)) if out_ranks is None else
+                 tuple(P(*((None,) * r)) for r in out_ranks))
     out = sharding_ctx.compat_shard_map(
         local, mesh=mesh,
         in_specs=tuple(batch_spec(a.ndim)
                        for a in [stacked, *slice_args]),
-        out_specs=P(*((None,) * stacked.ndim)))(stacked, *slice_args)
-    return out[:B] if pad else out
+        out_specs=out_specs)(stacked, *slice_args)
+    return jax.tree.map(lambda o: o[:B], out) if pad else out
 
 
 def polar_bucketed(views: Sequence[jax.Array], cfg: OptimizerConfig,
-                   key: Optional[jax.Array]) -> List[jax.Array]:
+                   key: Optional[jax.Array],
+                   with_iters: bool = False):
     """Polar factor of every matrix view via one batched call per bucket.
 
     Buckets gather directly in the engine's compute dtype
     (``cfg.matfn_dtype`` via the resolved MatfnPrecision policy) — the
     SVD method excepted, whose LAPACK path is pinned fp32 (DESIGN.md §9).
+
+    ``with_iters`` (NS family only, i.e. method prism/newton_schulz)
+    additionally returns per-view ``iters_used`` telemetry (DESIGN.md
+    §11): the realized iteration count of every slice, scattered back to
+    each view's lead shape — returns (outs, iters).  With ``cfg``'s
+    resolved ``tol`` set the counts are data-dependent (each bucket's
+    while_loop exits when its slowest slice certifies); otherwise they
+    are the static budget.
     """
     method = cfg.matfn_method
     pcfg = cfg.resolved_prism
     compute = None if method == "svd" else \
         cfg.matfn_precision.compute_dtype
     pad = cfg.bucket_pad and method != "svd"
+    if with_iters:
+        assert method in ("prism", "newton_schulz"), method
     buckets = plan_buckets([v.shape for v in views], pad=pad,
                            pad_slack=cfg.bucket_pad_slack)
     mesh, mesh_axes = mesh_batch_axes(cfg)
     outs: List[Optional[jax.Array]] = [None] * len(views)
+    iters: List[Optional[jax.Array]] = [None] * len(views)
     for bi, b in enumerate(buckets):
         stacked = gather_bucket(b, views, dtype=compute)
         local_reshard = (cfg.muon_local_reshard
@@ -308,6 +349,8 @@ def polar_bucketed(views: Sequence[jax.Array], cfg: OptimizerConfig,
             if method == "svd":
                 return matfn.polar(x, method="svd")
             kw = {"n_real": nr[0]} if nr else {}
+            if with_iters:  # NS family only (asserted above)
+                kw["return_iters"] = True
             return matfn.polar(x, method=method, cfg=_pcfg, key=_kk,
                                **kw)
 
@@ -316,18 +359,30 @@ def polar_bucketed(views: Sequence[jax.Array], cfg: OptimizerConfig,
             O = shard_over_batch(
                 run, mesh, mesh_axes, stacked,
                 slice_args=() if n_real is None else (n_real,),
-                slice_pads=() if n_real is None else (gram_full,))
+                slice_pads=() if n_real is None else (gram_full,),
+                out_ranks=(3, 1) if with_iters else None)
         else:
             O = run(stacked) if n_real is None else run(stacked, n_real)
+        if with_iters:
+            O, it = O
+            scatter_bucket_aux(b, it, iters)
         scatter_bucket(b, O, outs)
+    if with_iters:
+        return outs, iters
     return outs  # type: ignore[return-value]
 
 
 def transform_bucketed(mats: Sequence[jax.Array], fn,
-                       cfg: Optional[OptimizerConfig] = None
-                       ) -> List[jax.Array]:
+                       cfg: Optional[OptimizerConfig] = None,
+                       with_aux: bool = False):
     """Apply ``fn(stacked, bucket, bucket_index)`` once per exact-shape
     bucket and scatter the [B, n, n] results back.
+
+    ``with_aux``: fn returns (out [B, n, n], aux [B]) — a per-slice
+    companion (the §11 ``iters_used`` telemetry of Shampoo's inverse
+    roots) scattered back alongside; returns (outs, auxs).  The aux
+    must be per-slice like the output itself, so it shards/gathers with
+    the batch dim unchanged.
 
     The generic engine for matrix functions without a pad-exactness story
     (Shampoo inverse roots).  Gathers stay fp32 here: the stacked arrays
@@ -349,12 +404,19 @@ def transform_bucketed(mats: Sequence[jax.Array], fn,
     buckets = plan_buckets([m.shape for m in mats], pad=False)
     mesh, mesh_axes = mesh_batch_axes(cfg)
     outs: List[Optional[jax.Array]] = [None] * len(mats)
+    auxs: List[Optional[jax.Array]] = [None] * len(mats)
     for bi, b in enumerate(buckets):
         stacked = gather_bucket(b, mats)
         if mesh is not None:
             out = shard_over_batch(lambda x, _b=b, _bi=bi: fn(x, _b, _bi),
-                                   mesh, mesh_axes, stacked)
+                                   mesh, mesh_axes, stacked,
+                                   out_ranks=(3, 1) if with_aux else None)
         else:
             out = fn(stacked, b, bi)
+        if with_aux:
+            out, aux = out
+            scatter_bucket_aux(b, aux, auxs)
         scatter_bucket(b, out, outs)
+    if with_aux:
+        return outs, auxs
     return outs  # type: ignore[return-value]

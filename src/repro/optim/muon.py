@@ -32,6 +32,12 @@ the whole orthogonalization path (bucket gathers stack directly in bf16);
 step (refresh or stale) applies the cache-dtype polar, so the update
 direction is schedule-invariant.  Momentum and the applied parameter
 delta stay fp32.
+
+Adaptive early stopping (DESIGN.md §11): ``cfg.matfn_tol`` threads a
+convergence certificate into every bucketed polar chain — each bucket
+iterates only until its slowest slice certifies, instead of the full
+static budget — and the realized per-matrix iteration counts surface as
+an ``iters`` entry in each matrix leaf's state (``cfg.matfn_telemetry``).
 """
 from __future__ import annotations
 
@@ -55,6 +61,13 @@ def _flatten_with_axes(params, axes_tree):
 
 
 def make_muon(cfg: OptimizerConfig, axes_tree) -> base.Optimizer:
+    # §11 telemetry: with an adaptive tol the realized per-matrix
+    # iteration counts ("iters", the view's lead shape, int32) ride in
+    # the state next to the momentum — observability for schedules,
+    # benchmarks and tests, refreshed whenever the polar chains run and
+    # carried through stale (cached) steps untouched.
+    telemetry = cfg.matfn_telemetry
+
     def init(params):
         flat_p, flat_a, treedef = _flatten_with_axes(params, axes_tree)
         state = []
@@ -62,13 +75,18 @@ def make_muon(cfg: OptimizerConfig, axes_tree) -> base.Optimizer:
             mom = jnp.zeros(p.shape, jnp.float32)
             if base.is_matrix_param(a, p.shape):
                 s = {"mom": mom}
+                if telemetry or cfg.precond_every > 1:
+                    # view shape needed only for the telemetry/cache
+                    # entries; skip the throwaway zeros view otherwise
+                    M, _ = base.to_matrix_view(
+                        jnp.zeros(p.shape, jnp.float32), a)
+                if telemetry:
+                    s["iters"] = jnp.zeros(M.shape[:-2], jnp.int32)
                 if cfg.precond_every > 1:
                     # staleness cache: the orthogonalized momentum VIEW
                     # (possibly transposed/flattened vs the param layout);
                     # stored in cfg.cache_dtype — bf16 halves cached
                     # optimizer state, sharding rules unchanged (§9)
-                    M, _ = base.to_matrix_view(
-                        jnp.zeros(p.shape, jnp.float32), a)
                     s["ortho"] = jnp.zeros(M.shape,
                                            jnp.dtype(cfg.cache_dtype))
                 state.append(s)
@@ -79,8 +97,9 @@ def make_muon(cfg: OptimizerConfig, axes_tree) -> base.Optimizer:
                 "count": jnp.zeros((), jnp.int32)}
 
     def _polar_per_leaf(views, leaf_idx, key):
-        """Legacy per-leaf dispatch: one polar chain per matrix leaf."""
-        outs = []
+        """Legacy per-leaf dispatch: one polar chain per matrix leaf.
+        Returns (outs, iters) with iters None unless telemetry."""
+        outs, its = [], []
         for M, i in zip(views, leaf_idx):
             if cfg.muon_local_reshard and M.ndim >= 3:
                 # layers -> model, rows -> data: the NS iterations then
@@ -94,10 +113,16 @@ def make_muon(cfg: OptimizerConfig, axes_tree) -> base.Optimizer:
             kk = jax.random.fold_in(key, i) if key is not None else None
             if cfg.matfn_method == "svd":
                 outs.append(matfn.polar(M, method="svd"))
+            elif telemetry:
+                O, it = matfn.polar(M, method=cfg.matfn_method,
+                                    cfg=cfg.resolved_prism, key=kk,
+                                    return_iters=True)
+                outs.append(O)
+                its.append(it)
             else:
                 outs.append(matfn.polar(M, method=cfg.matfn_method,
                                         cfg=cfg.resolved_prism, key=kk))
-        return outs
+        return outs, (its if telemetry else None)
 
     def update(grads, state, params, step, key, refresh=None):
         flat_g, flat_a, treedef = _flatten_with_axes(grads, axes_tree)
@@ -143,29 +168,43 @@ def make_muon(cfg: OptimizerConfig, axes_tree) -> base.Optimizer:
         # otherwise — a skip step moves zero matrix-function bytes.
         def compute_polars():
             if cfg.bucketed:
-                return bucketing.polar_bucketed(views, cfg, key)
+                if telemetry:
+                    return bucketing.polar_bucketed(views, cfg, key,
+                                                    with_iters=True)
+                return bucketing.polar_bucketed(views, cfg, key), None
             return _polar_per_leaf(views, leaf_idx, key)
 
         if cfg.precond_every > 1 and views:
             cache_dt = jnp.dtype(cfg.cache_dtype)
             cached = [flat_s[i]["ortho"] for i in leaf_idx]
+            cached_it = ([flat_s[i]["iters"] for i in leaf_idx]
+                         if telemetry else None)
 
             def compute_cached():
                 # round to the cache dtype up front: both lax.cond
                 # branches carry the same dtype, and refresh vs stale
                 # steps apply identical (cache-rounded) polars
-                return [O.astype(cache_dt) for O in compute_polars()]
+                polars, its = compute_polars()
+                return [O.astype(cache_dt) for O in polars], its
+
+            def stale():
+                # stale steps reuse the cache AND its telemetry: "iters"
+                # always describes the most recent refresh
+                return (list(cached),
+                        list(cached_it) if telemetry else None)
 
             if isinstance(refresh, bool):  # static: picked at trace time
-                polars = compute_cached() if refresh else cached
+                polars, its = compute_cached() if refresh else stale()
             else:
                 do = (state["count"] % cfg.precond_every) == 0
-                polars = jax.lax.cond(do, compute_cached,
-                                      lambda: list(cached))
-            for O, i in zip(polars, leaf_idx):
-                new_s[i]["ortho"] = O
+                polars, its = jax.lax.cond(do, compute_cached, stale)
+            for j, i in enumerate(leaf_idx):
+                new_s[i]["ortho"] = polars[j]
         else:
-            polars = compute_polars()
+            polars, its = compute_polars()
+        if telemetry:
+            for j, i in enumerate(leaf_idx):
+                new_s[i]["iters"] = its[j]
         # pass 2: aspect-scale, un-view, apply
         for O, meta, i in zip(polars, metas, leaf_idx):
             p = flat_p[i]

@@ -31,6 +31,11 @@ CHAINS run at ``cfg.matfn_dtype`` compute with fp32 accumulation, and
 the cached "Linv"/"Rinv" store in ``cfg.cache_dtype`` — bf16 halves the
 cached inverse-root state; preconditioning promotes back to fp32 when
 the bf16 inverse multiplies the fp32 gradient.
+
+Adaptive early stopping (DESIGN.md §11): ``cfg.matfn_tol`` lets each
+inverse-root bucket iterate only until its slowest slice certifies;
+the realized counts ride in the state as "Linv_iters"/"Rinv_iters"
+(``cfg.matfn_telemetry``), refreshed together with the caches.
 """
 from __future__ import annotations
 
@@ -43,7 +48,11 @@ from repro.optim import base, bucketing
 from repro.optim.muon import _flatten_with_axes
 
 
-def _inv_root(A, p, cfg: OptimizerConfig, key):
+def _inv_root(A, p, cfg: OptimizerConfig, key, with_iters: bool = False):
+    """A^{-1/p} per ``cfg.matfn_method``; ``with_iters`` appends the
+    §11 ``iters_used`` telemetry (data-dependent under an adaptive
+    ``cfg.matfn_tol``; fit-free baselines report 0 — they certify
+    nothing)."""
     # the eps-ridge is applied to the fp32 EMA factor BEFORE any cast:
     # a bf16 ridge would round away eps against trace-scale entries (§9)
     eps = cfg.shampoo_eps
@@ -52,25 +61,40 @@ def _inv_root(A, p, cfg: OptimizerConfig, key):
         * jnp.eye(n, dtype=A.dtype) / n + eps * jnp.eye(n, dtype=A.dtype)
     pc = cfg.resolved_prism
     m = cfg.matfn_method
+
+    def plain(out):
+        return (out, jnp.zeros(A.shape[:-2], jnp.int32)) if with_iters \
+            else out
+
     if m == "eigh":
-        return matfn.inv_proot(Ad, p=p, method="eigh")
+        return plain(matfn.inv_proot(Ad, p=p, method="eigh"))
     if m == "polar_express" and p == 2:
-        return matfn.sqrtm(Ad, method="polar_express",
-                           iters=pc.iterations, dtype=pc.dtype)[1]
+        return plain(matfn.sqrtm(Ad, method="polar_express",
+                                 iters=pc.iterations, dtype=pc.dtype)[1])
     if m == "newton" and p == 2:
         # DB-Newton is Cholesky-based: pinned fp32 (DESIGN.md §9)
-        return matfn.sqrtm(Ad, method="newton",
-                           iters=pc.iterations)[1]
+        return plain(matfn.sqrtm(Ad, method="newton",
+                                 iters=pc.iterations)[1])
     if p == 2:
+        if with_iters:
+            (_, isq), it = matfn.sqrtm(Ad, method="prism", cfg=pc, key=key,
+                                       iters=pc.iterations,
+                                       return_iters=True)
+            return isq, it
         return matfn.sqrtm(Ad, method="prism", cfg=pc, key=key,
                            iters=pc.iterations)[1]
     return matfn.inv_proot(Ad, p=p, method="prism", key=key,
-                           iters=pc.iterations, dtype=jnp.dtype(pc.dtype))
+                           iters=pc.iterations, dtype=jnp.dtype(pc.dtype),
+                           tol=pc.tol, return_iters=with_iters)
 
 
 def make_shampoo(cfg: OptimizerConfig, axes_tree,
                  p_root: int = 2) -> base.Optimizer:
     maxd = cfg.max_precond_dim
+    # §11 telemetry: with an adaptive matfn_tol the realized inverse-root
+    # iteration counts ride in the state per preconditioner side
+    # ("Linv_iters"/"Rinv_iters"), refreshed with the caches
+    telemetry = cfg.matfn_telemetry
 
     def init(params):
         flat_p, flat_a, treedef = _flatten_with_axes(params, axes_tree)
@@ -87,11 +111,15 @@ def make_shampoo(cfg: OptimizerConfig, axes_tree,
                 if m <= maxd:
                     s["L"] = jnp.zeros(lead + (m, m), jnp.float32)
                     s["Linv"] = jnp.zeros(lead + (m, m), cache_dt)
+                    if telemetry:
+                        s["Linv_iters"] = jnp.zeros(lead, jnp.int32)
                 else:
                     s["diagL"] = jnp.zeros(lead + (m,), jnp.float32)
                 if n <= maxd:
                     s["R"] = jnp.zeros(lead + (n, n), jnp.float32)
                     s["Rinv"] = jnp.zeros(lead + (n, n), cache_dt)
+                    if telemetry:
+                        s["Rinv_iters"] = jnp.zeros(lead, jnp.int32)
                 else:
                     s["diagR"] = jnp.zeros(lead + (n,), jnp.float32)
                 state.append(s)
@@ -101,12 +129,14 @@ def make_shampoo(cfg: OptimizerConfig, axes_tree,
         return {"leaves": jax.tree.unflatten(treedef, state),
                 "count": jnp.zeros((), jnp.int32)}
 
-    def _inv_roots_bucketed(mats, prevs, recompute, key):
+    def _inv_roots_bucketed(mats, prevs, prev_its, recompute, key):
         """All buckets under ONE recompute cond: the cache-hit branch
         returns the per-leaf cached inverses untouched, so steps between
         recomputes move zero preconditioner bytes (no gather/scatter).
         A static (Python bool) ``recompute`` picks the branch at trace
-        time instead — the skip variant contains no inverse-root ops."""
+        time instead — the skip variant contains no inverse-root ops.
+        Returns (invs, its); ``its`` is None unless telemetry (stale
+        steps then carry the previous refresh's counts)."""
         cache_dt = jnp.dtype(cfg.cache_dtype)
 
         def compute():
@@ -115,28 +145,49 @@ def make_shampoo(cfg: OptimizerConfig, axes_tree,
                       if key is not None else None)
                 # cast INSIDE the per-bucket fn so lax.cond branches and
                 # the sharded all-gather both carry the cache dtype
+                if telemetry:
+                    inv, it = _inv_root(stacked, p_root, cfg, kk,
+                                        with_iters=True)
+                    return inv.astype(cache_dt), it
                 return _inv_root(stacked, p_root, cfg, kk).astype(cache_dt)
 
-            return bucketing.transform_bucketed(mats, one_bucket, cfg)
+            out = bucketing.transform_bucketed(mats, one_bucket, cfg,
+                                               with_aux=telemetry)
+            return out if telemetry else (out, None)
+
+        def stale():
+            return list(prevs), (list(prev_its) if telemetry else None)
 
         if isinstance(recompute, bool):
-            return compute() if recompute else list(prevs)
-        return jax.lax.cond(recompute, compute, lambda: list(prevs))
+            return compute() if recompute else stale()
+        return jax.lax.cond(recompute, compute, stale)
 
-    def _inv_roots_per_leaf(mats, prevs, recompute, keys):
+    def _inv_roots_per_leaf(mats, prevs, prev_its, recompute, keys):
         cache_dt = jnp.dtype(cfg.cache_dtype)
+
+        def one(A, kk):
+            if telemetry:
+                inv, it = _inv_root(A, p_root, cfg, kk, with_iters=True)
+                return inv.astype(cache_dt), it
+            return _inv_root(A, p_root, cfg, kk).astype(cache_dt), None
+
         if isinstance(recompute, bool):
-            return ([_inv_root(A, p_root, cfg, kk).astype(cache_dt)
-                     for A, kk in zip(mats, keys)] if recompute
-                    else list(prevs))
-        outs = []
-        for A, prev, kk in zip(mats, prevs, keys):
-            outs.append(jax.lax.cond(
+            if not recompute:
+                return list(prevs), (list(prev_its) if telemetry else None)
+            outs = [one(A, kk) for A, kk in zip(mats, keys)]
+            return ([o for o, _ in outs],
+                    [it for _, it in outs] if telemetry else None)
+        outs, its = [], []
+        for A, prev, prev_it, kk in zip(mats, prevs, prev_its, keys):
+            got = jax.lax.cond(
                 recompute,
-                lambda A=A, kk=kk: _inv_root(A, p_root, cfg,
-                                             kk).astype(cache_dt),
-                lambda prev=prev: prev))
-        return outs
+                lambda A=A, kk=kk: one(A, kk)[:(2 if telemetry else 1)],
+                lambda prev=prev, prev_it=prev_it:
+                    (prev, prev_it) if telemetry else (prev,))
+            outs.append(got[0])
+            if telemetry:
+                its.append(got[1])
+        return outs, (its if telemetry else None)
 
     def update(grads, state, params, step, key, refresh=None):
         flat_g, flat_a, treedef = _flatten_with_axes(grads, axes_tree)
@@ -150,7 +201,8 @@ def make_shampoo(cfg: OptimizerConfig, axes_tree,
         new_p = [None] * len(flat_g)
         new_s = [None] * len(flat_g)
         # pass 1: EMA the Kronecker factors; queue the inverse-root jobs
-        matrix, jobs = [], []  # jobs: (leaf, "Linv"/"Rinv", A, prev, key_ix)
+        # jobs: (leaf, "Linv"/"Rinv", A, prev, prev_iters, key_ix)
+        matrix, jobs = [], []
         for i, (g, a, pp, s) in enumerate(zip(flat_g, flat_a, flat_p,
                                               flat_s)):
             g = g.astype(jnp.float32)
@@ -170,33 +222,40 @@ def make_shampoo(cfg: OptimizerConfig, axes_tree,
             if "L" in s:
                 L = beta2 * s["L"] + jnp.einsum("...mk,...nk->...mn", G, G)
                 ns["L"] = L
-                jobs.append((i, "Linv", L, s["Linv"], 0))
+                jobs.append((i, "Linv", L, s["Linv"],
+                             s.get("Linv_iters"), 0))
             else:
                 ns["diagL"] = beta2 * s["diagL"] + jnp.sum(G * G, axis=-1)
             if "R" in s:
                 R = beta2 * s["R"] + jnp.einsum("...km,...kn->...mn", G, G)
                 ns["R"] = R
-                jobs.append((i, "Rinv", R, s["Rinv"], 1))
+                jobs.append((i, "Rinv", R, s["Rinv"],
+                             s.get("Rinv_iters"), 1))
             else:
                 ns["diagR"] = beta2 * s["diagR"] + jnp.sum(G * G, axis=-2)
             matrix.append((i, G, meta))
             new_s[i] = ns
         # inverse roots: one batched call per shape bucket across ALL
         # leaves' L and R factors (per-leaf loop behind cfg.bucketed=False)
-        mats = [A for (_, _, A, _, _) in jobs]
-        prevs = [prev for (_, _, _, prev, _) in jobs]
+        mats = [A for (_, _, A, _, _, _) in jobs]
+        prevs = [prev for (_, _, _, prev, _, _) in jobs]
+        prev_its = [it for (_, _, _, _, it, _) in jobs]
         if cfg.bucketed:
-            invs = _inv_roots_bucketed(mats, prevs, recompute, key)
+            invs, its = _inv_roots_bucketed(mats, prevs, prev_its,
+                                            recompute, key)
         else:
             keys = []
-            for (i, _, _, _, side) in jobs:
+            for (i, _, _, _, _, side) in jobs:
                 kk = jax.random.fold_in(key, i) if key is not None else None
                 if kk is not None and side:
                     kk = jax.random.fold_in(kk, 1)
                 keys.append(kk)
-            invs = _inv_roots_per_leaf(mats, prevs, recompute, keys)
-        for (i, name, _, _, _), inv in zip(jobs, invs):
-            new_s[i][name] = inv
+            invs, its = _inv_roots_per_leaf(mats, prevs, prev_its,
+                                            recompute, keys)
+        for j, (i, name, _, _, _, _) in enumerate(jobs):
+            new_s[i][name] = invs[j]
+            if telemetry:
+                new_s[i][name + "_iters"] = its[j]
         # pass 2: precondition, graft, momentum, apply
         for i, G, meta in matrix:
             s, ns = flat_s[i], new_s[i]

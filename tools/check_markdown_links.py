@@ -1,0 +1,100 @@
+"""Markdown link check for the docs layer (CI's docs leg).
+
+Dependency-free: scans the repo's markdown for inline links/images and
+verifies that every RELATIVE target resolves to a real file (and, for
+``file#anchor`` targets, that the anchor matches a heading's GitHub-style
+slug in the target file).  External http(s)/mailto links are not fetched
+— CI has no network policy for docs — only malformed empty targets fail.
+
+    python tools/check_markdown_links.py [paths...]
+
+With no arguments checks README.md, DESIGN.md, PAPER.md, ROADMAP.md,
+CHANGES.md and docs/**/*.md.
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# inline [text](target) / ![alt](target); reference-style links are not
+# used in this repo.  Targets with spaces are not valid here.
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]*)\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+_CODE_FENCE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug: lowercase, drop punctuation, spaces to
+    hyphens."""
+    h = heading.strip().lower()
+    h = re.sub(r"[^\w\- ]", "", h, flags=re.UNICODE)
+    return h.replace(" ", "-")
+
+
+def _anchors(path: str) -> set:
+    with open(path, encoding="utf-8") as f:
+        text = _CODE_FENCE.sub("", f.read())
+    return {_slug(m.group(1)) for m in _HEADING.finditer(text)}
+
+
+def check_file(path: str) -> list:
+    errs = []
+    with open(path, encoding="utf-8") as f:
+        raw = f.read()
+    # links inside fenced code blocks are examples, not navigation
+    text = _CODE_FENCE.sub("", raw)
+    for m in _LINK.finditer(text):
+        target = m.group(1)
+        where = f"{os.path.relpath(path, ROOT)}: ({target})"
+        if not target:
+            errs.append(f"{where} empty link target")
+            continue
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        frag = None
+        if "#" in target:
+            target, frag = target.split("#", 1)
+        if target:
+            dest = os.path.normpath(
+                os.path.join(os.path.dirname(path), target))
+            if not os.path.exists(dest):
+                errs.append(f"{where} missing file {target!r}")
+                continue
+        else:  # same-file anchor
+            dest = path
+        if frag is not None:
+            if os.path.isdir(dest) or not dest.endswith(".md"):
+                continue  # only markdown anchors are checkable
+            if _slug(frag) not in _anchors(dest):
+                errs.append(f"{where} missing anchor #{frag}")
+    return errs
+
+
+def main(argv) -> int:
+    paths = argv or (
+        [p for p in ("README.md", "DESIGN.md", "PAPER.md", "ROADMAP.md",
+                     "CHANGES.md")
+         if os.path.exists(os.path.join(ROOT, p))]
+        + glob.glob(os.path.join(ROOT, "docs", "**", "*.md"),
+                    recursive=True))
+    errs = []
+    for p in paths:
+        full = p if os.path.isabs(p) else os.path.join(ROOT, p)
+        if not os.path.exists(full):
+            errs.append(f"{p}: file not found")
+            continue
+        file_errs = check_file(full)
+        errs.extend(file_errs)
+        print(f"check_markdown_links: {os.path.relpath(full, ROOT)} "
+              f"({'FAIL' if file_errs else 'ok'})", flush=True)
+    for e in errs:
+        print(f"check_markdown_links: ERROR {e}", flush=True)
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
