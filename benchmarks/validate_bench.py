@@ -185,8 +185,98 @@ def validate_batched_matfn(doc: dict, name: str):
     return errs
 
 
+ASYNC_PRECOND_TOP = {
+    "benchmark": lambda x: x == "async_precond",
+    "backend": lambda x: isinstance(x, str) and x,
+    "period": _pos_int,
+    "notes": _str_list,
+    "results": lambda x: isinstance(x, list) and x,
+    "schedule": lambda x: isinstance(x, dict),
+}
+
+ASYNC_PRECOND_ROW = {
+    "n": _pos_int,
+    "layers": _pos_int,
+    "period": _pos_int,
+    "steady_ms": _nonneg,
+    "refresh_ms": _nonneg,
+    "blocking_step_ms": _nonneg,
+    "speedup_refresh_step": _nonneg,
+    "speedup_amortized": _nonneg,
+    # the §12 contract: the async steady step compiles with ZERO matfn
+    # launches — all of them live in the refresh program.  Regenerating
+    # under REPRO_KERNEL_MODE=ref skips counting and is rejected here.
+    "blocking_launches_steady": lambda x: x == 0,
+    "launches_refresh": _pos_int,
+    "launches_blocking_step": _pos_int,
+}
+
+ASYNC_PRECOND_SCHEDULE = {
+    "steps": _pos_int,
+    "segment": _pos_int,
+    "period_clock": _pos_int,
+    "ceiling_drift": _pos_int,
+    "drift_threshold": lambda x: _is_num(x) and x > 0,
+    "refreshes_clock": _pos_int,
+    "refreshes_drift": _pos_int,
+    "drift_triggered": lambda x: isinstance(x, int) and x >= 0,
+    "drift_max_clock": _nonneg,
+    "drift_max_drift": _nonneg,
+}
+
+
+def validate_async_precond(doc: dict, name: str):
+    errs = []
+    for field, ok in ASYNC_PRECOND_TOP.items():
+        if field not in doc:
+            errs.append(f"{name}: missing top-level field {field!r}")
+        elif not ok(doc[field]):
+            errs.append(f"{name}: bad top-level {field}={doc[field]!r}")
+    for i, row in enumerate(doc.get("results") or []):
+        where = f"{name}: results[{i}]"
+        if not isinstance(row, dict):
+            errs.append(f"{where} is not an object")
+            continue
+        for field, ok in ASYNC_PRECOND_ROW.items():
+            if field not in row:
+                errs.append(f"{where}: missing field {field!r}")
+            elif not ok(row[field]):
+                errs.append(f"{where}: bad value {field}={row[field]!r}")
+    sched = doc.get("schedule")
+    if isinstance(sched, dict):
+        where = f"{name}: schedule"
+        for field, ok in ASYNC_PRECOND_SCHEDULE.items():
+            if field not in sched:
+                errs.append(f"{where}: missing field {field!r}")
+            elif not ok(sched[field]):
+                errs.append(f"{where}: bad value "
+                            f"{field}={sched[field]!r}")
+        if errs:
+            return errs
+        # the headline claim: at an equal max-staleness residual target
+        # (threshold = the clock schedule's realized max drift), the
+        # drift trigger must refresh NO MORE often than the fixed clock
+        if not sched["refreshes_drift"] <= sched["refreshes_clock"]:
+            errs.append(f"{where}: drift schedule refreshed more than "
+                        f"the fixed clock ({sched['refreshes_drift']} vs "
+                        f"{sched['refreshes_clock']})")
+        # "equal residual": the drift run's realized staleness stays
+        # within 2x the clock's — the trigger fires the refresh the step
+        # drift crosses the threshold, but the swap lands one dispatch-
+        # to-swap delay later, so a shift-boundary spike can overshoot
+        if sched["drift_max_drift"] > 2.0 * sched["drift_max_clock"]:
+            errs.append(f"{where}: drift run's max staleness "
+                        f"{sched['drift_max_drift']} above 2x the clock "
+                        f"schedule's {sched['drift_max_clock']}")
+        if sched["drift_threshold"] > 1.01 * sched["drift_max_clock"]:
+            errs.append(f"{where}: threshold not anchored to the clock "
+                        f"run's realized max drift")
+    return errs
+
+
 VALIDATORS = {
     "BENCH_batched_matfn.json": validate_batched_matfn,
+    "BENCH_async_precond.json": validate_async_precond,
 }
 
 

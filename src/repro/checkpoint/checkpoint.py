@@ -33,11 +33,22 @@ def _flatten(tree):
     return out
 
 
-def save(ckpt_dir: str, step: int, tree: Any,
-         keep: int = 3, async_write: bool = False) -> Optional[threading.Thread]:
-    """Save tree at step; returns the writer thread if async."""
+def save(ckpt_dir: str, step: int, tree: Any, keep: int = 3,
+         async_write: bool = False,
+         drop=()) -> Optional[threading.Thread]:
+    """Save tree at step; returns the writer thread if async.
+
+    ``drop``: collection of key names — any leaf whose path contains one
+    of them is excluded from the file (e.g. the in-flight pending
+    preconditioner buffers of the §12 async refresh plane, which a
+    restore must discard anyway: restore(allow_missing=...) keeps the
+    target's own value for them)."""
     os.makedirs(ckpt_dir, exist_ok=True)
     arrays = _flatten(tree)  # device_get happens synchronously (snapshot)
+    if drop:
+        drop = frozenset(drop)
+        arrays = {k: v for k, v in arrays.items()
+                  if not drop.intersection(k.split(_SEP))}
 
     def _write():
         final = os.path.join(ckpt_dir, f"step_{step:08d}")
@@ -86,15 +97,19 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
 
 
 def restore(ckpt_dir: str, target: Any, step: Optional[int] = None,
-            shardings: Any = None) -> tuple[int, Any]:
+            shardings: Any = None, allow_missing=()) -> tuple[int, Any]:
     """Restore into the structure of ``target`` (tree of arrays or
     ShapeDtypeStructs).  ``shardings``: matching tree of NamedShardings for
-    elastic re-shard; None keeps default placement."""
+    elastic re-shard; None keeps default placement.  ``allow_missing``:
+    key names that may legitimately be absent from the file (saved with
+    ``drop=``) — the target's own leaf is kept for those instead of
+    raising."""
     step = latest_step(ckpt_dir) if step is None else step
     if step is None:
         raise FileNotFoundError(f"no complete checkpoint in {ckpt_dir}")
     path = os.path.join(ckpt_dir, f"step_{step:08d}", "tree.npz")
     data = np.load(path)
+    allow_missing = frozenset(allow_missing)
     flat, treedef = jax.tree_util.tree_flatten_with_path(target)
     shard_flat = (jax.tree.leaves(shardings)
                   if shardings is not None else [None] * len(flat))
@@ -102,6 +117,10 @@ def restore(ckpt_dir: str, target: Any, step: Optional[int] = None,
     for (p, leaf), sh in zip(flat, shard_flat):
         k = _SEP.join(str(getattr(q, "key", getattr(q, "idx", q)))
                       for q in p)
+        if k not in data.files and \
+                allow_missing.intersection(k.split(_SEP)):
+            out.append(leaf if sh is None else jax.device_put(leaf, sh))
+            continue
         arr = data[k]
         want = tuple(leaf.shape)
         if tuple(arr.shape) != want:

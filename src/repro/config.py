@@ -315,8 +315,32 @@ class OptimizerConfig:
     # Exact at step 0 (count % K == 0 refreshes, so the first step always
     # computes).  1 => refresh every step; Muon then carries no cache.
     # Shampoo's effective period is max(precond_every, precondition_every)
-    # (the latter is the legacy Shampoo-only knob).
+    # (the latter is the legacy Shampoo-only knob); use
+    # optim.base.resolve_refresh_period for the resolved K.
     precond_every: int = 1
+    # async preconditioner service (DESIGN.md §12): double-buffered
+    # refresh plane.  Matrix-function chains NEVER run inside the train
+    # step — each Muon/Shampoo state carries an ACTIVE preconditioner
+    # buffer (consumed every step) and a PENDING one, recomputed by a
+    # separately jitted ``Optimizer.refresh`` dispatched between steps
+    # without blocking and swapped in ``precond_swap_delay`` steps later
+    # under a lax.cond.  Steady-state steps then compile with zero matfn
+    # launches.  Requires precond_every > 1 (the fixed refresh clock stays
+    # as the staleness ceiling).
+    precond_async: bool = False
+    # steps between the async refresh DISPATCH and the pending->active
+    # buffer swap: the window the refresh chains have to complete behind
+    # forward/backward before any step consumes them.
+    precond_swap_delay: int = 1
+    # drift-triggered refresh (DESIGN.md §12): with matfn_tol set, the
+    # optimizer state tracks a first-order proxy for the cached
+    # preconditioner's residual drift (accumulated relative movement of
+    # the matrix the cache was computed from) and a refresh is dispatched
+    # as soon as the estimated cached residual tol + drift crosses
+    # matfn_tol * precond_drift_slack — instead of waiting for the fixed
+    # precond_every clock, which remains the ceiling.  0 disables the
+    # trigger (pure clock schedule).
+    precond_drift_slack: float = 0.0
     # distributed tricks
     gradient_compression: str = "none"  # none | int8
     # "bfloat16": differentiate wrt the bf16 compute params so the data-
@@ -327,6 +351,38 @@ class OptimizerConfig:
     # before the polar iteration: Newton-Schulz runs with one small R-psum
     # instead of full cross-mesh GEMM collectives (§Perf iteration 3).
     muon_local_reshard: bool = False
+
+    def __post_init__(self):
+        if self.precond_async and self.precond_every <= 1:
+            raise ValueError(
+                "precond_async requires precond_every > 1: the fixed "
+                "refresh clock is the staleness ceiling of the async "
+                "service (DESIGN.md §12)")
+        if self.precond_swap_delay < 0:
+            raise ValueError("precond_swap_delay must be >= 0, got "
+                             f"{self.precond_swap_delay!r}")
+        if self.precond_drift_slack < 0:
+            raise ValueError("precond_drift_slack must be >= 0, got "
+                             f"{self.precond_drift_slack!r}")
+        if self.precond_drift_slack > 0 and self.matfn_tol is None:
+            raise ValueError(
+                "precond_drift_slack needs matfn_tol: the drift trigger "
+                "threshold is matfn_tol * precond_drift_slack — the "
+                "certificate units of DESIGN.md §11/§12")
+
+    @property
+    def drift_threshold(self) -> Optional[float]:
+        """Drift value at which the async service dispatches a refresh
+        (DESIGN.md §12), or None when the trigger is disabled: the
+        estimated residual of the CACHED preconditioner — its refresh
+        certificate (<= matfn_tol, §11) plus the accumulated relative
+        drift of the underlying matrix — crosses
+        ``matfn_tol * precond_drift_slack``, i.e. the drift proxy alone
+        crosses ``matfn_tol * (precond_drift_slack - 1)``."""
+        if not (self.precond_async and self.precond_drift_slack > 0
+                and self.matfn_tol is not None):
+            return None
+        return self.matfn_tol * max(self.precond_drift_slack - 1.0, 0.0)
 
     @property
     def resolved_prism(self) -> PrismConfig:

@@ -224,10 +224,21 @@ def decode_input_shardings(mesh: Mesh, cfg: ModelConfig, batch_size: int):
     return {"tokens": tok, "pos": NamedSharding(mesh, P(b, None))}
 
 
+#: optimizer-state keys that hold cached preconditioner buffers with a
+#: non-param layout — the active caches AND their §12 pending twins.
+#: Twins shard identically to their active halves (same shape, same
+#: spec), so the double-buffer swap lowers to a local per-shard select:
+#: no resharding collective on the swap step.
+PRECOND_CACHE_STATE_KEYS = frozenset({
+    "ortho", "Linv", "Rinv", "ortho_p", "Linv_p", "Rinv_p",
+})
+
+
 def precond_cache_sharding(mesh: Mesh, shape: Tuple[int, ...]):
     """Sharding for cached preconditioner buffers in the optimizer state
     (Muon "ortho" matrix views [..lead.., m, n], Shampoo "Linv"/"Rinv"
-    inverse roots [..lead.., n, n]) whose layout differs from the param
+    inverse roots [..lead.., n, n], and their pending "*_p" twins under
+    the §12 async refresh plane) whose layout differs from the param
     (transposed/flattened views, factor squares).
 
     Layout mirrors the muon_local_reshard rule (DESIGN.md §4): the leading

@@ -20,10 +20,197 @@ class Optimizer(NamedTuple):
               can compile a skip-step variant that contains zero
               matrix-function work (and a refresh variant that always
               recomputes).  Optimizers without caches ignore it.
+
+    The REFRESH PLANE (DESIGN.md §12) extends that contract from "skip"
+    to "never-in-step": with ``OptimizerConfig.precond_async`` the update
+    only ever consumes the ACTIVE preconditioner buffer (and swaps a
+    PENDING one in under a lax.cond — zero matrix-function launches on
+    every step), while the matfn chains themselves live in the separate
+    ``refresh`` callable:
+
+        refresh(state, key) -> flat list of per-slot partial dicts
+
+    — one dict per state slot (the flattened order of
+    ``_flat_slots(state["leaves"])``), holding exactly the entries to
+    overwrite: the pending buffers (``ortho_p`` / ``Linv_p`` /
+    ``Rinv_p``), the drift-reference norm ``rnorm``, a zeroed drift
+    accumulator ``dnorm``, and pending telemetry twins.  The trainer jits
+    and dispatches it WITHOUT blocking and installs the result via
+    ``install_pending`` (pure pytree surgery — no device compute), so
+    steps overlap the chains instead of waiting on them.  ``None`` for
+    optimizers without a cached-preconditioner plane (AdamW).
     """
 
     init: Callable[[Any], Any]
     update: Callable[..., Tuple[Any, Any]]
+    refresh: Optional[Callable] = None
+
+
+#: optimizer-state entries that belong to the in-flight half of the
+#: double buffer (DESIGN.md §12): the pending preconditioners and their
+#: telemetry twins.  Checkpoints may drop them (checkpoint.save(drop=))
+#: — a restore then starts from a mark-stale state (discard_pending)
+#: instead of ever consuming a half-written buffer.
+PENDING_STATE_KEYS = frozenset({
+    "ortho_p", "Linv_p", "Rinv_p",
+    "iters_p", "Linv_iters_p", "Rinv_iters_p",
+})
+
+#: ``state["pending_at"]`` value meaning "no refresh in flight".  A large
+#: negative sentinel rather than -1: the bootstrap dispatch BACK-DATES
+#: ``pending_at = step - precond_swap_delay`` (possibly negative) so its
+#: swap fires on the dispatching step itself, and that must stay
+#: distinguishable from "none".
+NO_PENDING = -(1 << 30)
+
+
+def resolve_refresh_period(cfg, name: Optional[str] = None) -> int:
+    """Effective preconditioner refresh period K for one optimizer.
+
+    The single source of truth for the staleness clock (DESIGN.md §8/
+    §12): Muon refreshes every ``precond_every`` steps; Shampoo honors
+    its legacy ``precondition_every`` knob too, so its period is the max
+    of the two.  ``name`` overrides ``cfg.name`` (for callers holding a
+    config reused across optimizers).  Trainers, the async service and
+    the optimizers themselves all derive the modulus from here.
+    """
+    name = cfg.name if name is None else name
+    k = max(1, int(cfg.precond_every))
+    if name == "shampoo":
+        k = max(k, int(cfg.precondition_every))
+    return k
+
+
+# ----------------------------------------------------------- refresh plane
+
+def _is_slot(x) -> bool:
+    return isinstance(x, dict) and "mom" in x
+
+
+def _flat_slots(leaves_tree):
+    """Flatten a state["leaves"] tree up to its per-param slot dicts.
+
+    Returns (slots, treedef); the slot order matches the flattened param
+    order (the tree has the params' structure with a dict at every leaf
+    position), so it aligns with the optimizers' flat gradient lists and
+    with the partial-update lists an ``Optimizer.refresh`` returns.
+    """
+    treedef = jax.tree.structure(leaves_tree, is_leaf=_is_slot)
+    return treedef.flatten_up_to(leaves_tree), treedef
+
+
+def install_pending(state, partials, at_step: int):
+    """Merge an ``Optimizer.refresh`` result into the state (§12).
+
+    Pure Python pytree surgery — replaces leaf references, runs zero
+    device compute, and in particular does NOT make subsequent steps'
+    unchanged leaves depend on the refresh computation (the whole point
+    of dispatching the chains asynchronously).  ``at_step`` stamps
+    ``pending_at``: the update swaps pending -> active once
+    ``count >= pending_at + precond_swap_delay``.
+    """
+    slots, treedef = _flat_slots(state["leaves"])
+    merged = [dict(s, **p) if p else s for s, p in zip(slots, partials)]
+    return dict(state, leaves=treedef.unflatten(merged),
+                pending_at=jnp.asarray(at_step, jnp.int32))
+
+
+def discard_pending(state):
+    """Mark any in-flight pending preconditioner stale (§12): a state
+    restored mid-interval (checkpoint resume, elastic restart) must
+    never swap in a buffer whose payload was dropped from the checkpoint
+    or written by a run with a different schedule.  No-op for states
+    without a refresh plane."""
+    if not isinstance(state, dict) or "pending_at" not in state:
+        return state
+    return dict(state, pending_at=jnp.full((), NO_PENDING, jnp.int32))
+
+
+def precond_drift(state) -> jax.Array:
+    """Relative drift of the cached preconditioners since the last
+    refresh dispatch (§12): max over slots of ``dnorm / rnorm``, where
+    ``rnorm`` is the Frobenius norm of the matrix the cache was computed
+    from and ``dnorm`` the accumulated per-step movement of that matrix.
+    0 for states without drift tracking.  Cheap (a handful of scalars) —
+    the trainer surfaces it in the step metrics and feeds it back to the
+    AsyncPrecondService's trigger."""
+    if not isinstance(state, dict) or "leaves" not in state:
+        return jnp.zeros((), jnp.float32)
+    slots, _ = _flat_slots(state["leaves"])
+    ds = [s["dnorm"] / jnp.maximum(s["rnorm"], 1e-12)
+          for s in slots if _is_slot(s) and "dnorm" in s]
+    if not ds:
+        return jnp.zeros((), jnp.float32)
+    return jnp.max(jnp.stack(ds))
+
+
+class AsyncPrecondService:
+    """Host-side scheduler of the double-buffered refresh plane (§12).
+
+    Owns the Python half of the async contract: decides WHEN to dispatch
+    a refresh (drift trigger with the fixed clock as ceiling), dispatches
+    the jitted ``Optimizer.refresh`` without blocking, installs the
+    pending buffers via ``install_pending``, and keeps the
+    ``matfn_telemetry`` counters the trainer logs.
+
+    >>> svc.matfn_telemetry                      # doctest: +SKIP
+    {'refreshes': 7, 'drift_triggered': 5, 'clock_triggered': 1,
+     'bootstrap': 1, 'last_drift': 0.013}
+    """
+
+    def __init__(self, opt: Optimizer, cfg, refresh_jit=None):
+        assert opt.refresh is not None, \
+            "optimizer has no refresh plane (AdamW?)"
+        self.cfg = cfg
+        self.period = resolve_refresh_period(cfg)
+        self.swap_delay = int(cfg.precond_swap_delay)
+        self.threshold = cfg.drift_threshold
+        self._refresh = refresh_jit if refresh_jit is not None \
+            else jax.jit(opt.refresh)
+        self.last_dispatch: Optional[int] = None
+        self.last_drift: float = 0.0
+        self.counters = {"refreshes": 0, "drift_triggered": 0,
+                         "clock_triggered": 0, "bootstrap": 0}
+
+    def due(self, step: int, drift: float) -> Optional[str]:
+        """None, or why a refresh should dispatch at ``step``."""
+        if self.last_dispatch is None:
+            return "bootstrap"
+        if step <= self.last_dispatch + self.swap_delay:
+            # previous refresh's swap has not run yet (it runs inside the
+            # update of step last_dispatch + swap_delay): dispatching now
+            # would overwrite a never-consumed pending buffer
+            return None
+        if step - self.last_dispatch >= self.period:
+            return "clock_triggered"  # the fixed-schedule ceiling
+        if self.threshold is not None and drift >= self.threshold:
+            return "drift_triggered"
+        return None
+
+    def step_begin(self, state, step: int, key, drift: float = 0.0):
+        """Phase 1 of the two-phase step loop: maybe dispatch a refresh.
+
+        Non-blocking — the chains are enqueued and the pending buffers
+        installed as futures; nothing here waits on device compute.  The
+        bootstrap dispatch back-dates ``pending_at`` so its swap fires on
+        this very step (the first step then waits on its own
+        preconditioner, exactly like a blocking first step would).
+        """
+        self.last_drift = drift
+        reason = self.due(step, drift)
+        if reason is None:
+            return state
+        partials = self._refresh(state, key)
+        at = step - self.swap_delay if reason == "bootstrap" else step
+        state = install_pending(state, partials, at)
+        self.last_dispatch = step
+        self.counters["refreshes"] += 1
+        self.counters[reason] += 1
+        return state
+
+    @property
+    def matfn_telemetry(self) -> dict:
+        return dict(self.counters, last_drift=self.last_drift)
 
 
 def global_norm(tree) -> jax.Array:

@@ -372,6 +372,41 @@ def polar_bucketed(views: Sequence[jax.Array], cfg: OptimizerConfig,
     return outs  # type: ignore[return-value]
 
 
+def polar_refresh(views: Sequence[jax.Array], cfg: OptimizerConfig,
+                  key: Optional[jax.Array]):
+    """The Muon preconditioner refresh as one standalone callable
+    (DESIGN.md §12): polar factors of every view, telemetry included iff
+    ``cfg.matfn_telemetry``.  Returns ``(outs, iters)`` with ``iters``
+    None when telemetry is off.
+
+    This is the exact computation a blocking in-step refresh runs —
+    factored out of the update so the async service can jit and dispatch
+    it as its own program (and so the in-step path and the refresh plane
+    can never drift apart).  Dispatch tier (§7 bucketing, §8 sharding,
+    §10 fusion, §11 adaptivity) all resolve inside ``polar_bucketed``
+    as usual.
+    """
+    if not cfg.bucketed:
+        outs, its = [], []
+        for i, M in enumerate(views):
+            kk = jax.random.fold_in(key, i) if key is not None else None
+            if cfg.matfn_method == "svd":
+                outs.append(matfn.polar(M, method="svd"))
+            elif cfg.matfn_telemetry:
+                O, it = matfn.polar(M, method=cfg.matfn_method,
+                                    cfg=cfg.resolved_prism, key=kk,
+                                    return_iters=True)
+                outs.append(O)
+                its.append(it)
+            else:
+                outs.append(matfn.polar(M, method=cfg.matfn_method,
+                                        cfg=cfg.resolved_prism, key=kk))
+        return outs, (its if cfg.matfn_telemetry else None)
+    if cfg.matfn_telemetry:
+        return polar_bucketed(views, cfg, key, with_iters=True)
+    return polar_bucketed(views, cfg, key), None
+
+
 def transform_bucketed(mats: Sequence[jax.Array], fn,
                        cfg: Optional[OptimizerConfig] = None,
                        with_aux: bool = False):

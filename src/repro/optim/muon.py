@@ -38,6 +38,18 @@ convergence certificate into every bucketed polar chain — each bucket
 iterates only until its slowest slice certifies, instead of the full
 static budget — and the realized per-matrix iteration counts surface as
 an ``iters`` entry in each matrix leaf's state (``cfg.matfn_telemetry``).
+
+Async refresh plane (DESIGN.md §12): with ``cfg.precond_async`` the
+polar chains NEVER run inside ``update``.  Each matrix leaf carries an
+active "ortho" buffer (consumed every step) and a pending "ortho_p"
+twin; the separately jitted ``refresh`` member recomputes the pending
+polars from the stored momentum (bucketing.polar_refresh — the same
+computation an in-step refresh would run) and the update swaps
+pending -> active under ONE lax.cond once
+``count >= pending_at + precond_swap_delay``.  The update also
+accumulates the drift proxy ("dnorm"/"rnorm": movement of the momentum
+relative to its norm at the last refresh dispatch) that feeds the
+drift-triggered schedule.
 """
 from __future__ import annotations
 
@@ -89,12 +101,26 @@ def make_muon(cfg: OptimizerConfig, axes_tree) -> base.Optimizer:
                     # optimizer state, sharding rules unchanged (§9)
                     s["ortho"] = jnp.zeros(M.shape,
                                            jnp.dtype(cfg.cache_dtype))
+                if cfg.precond_async:
+                    # §12 double buffer: pending twin (sharded like the
+                    # active cache) + the drift-proxy scalars
+                    s["ortho_p"] = jnp.zeros(M.shape,
+                                             jnp.dtype(cfg.cache_dtype))
+                    s["dnorm"] = jnp.zeros((), jnp.float32)
+                    s["rnorm"] = jnp.zeros((), jnp.float32)
+                    if telemetry:
+                        s["iters_p"] = jnp.zeros(M.shape[:-2], jnp.int32)
                 state.append(s)
             else:
                 state.append({"mom": mom,
                               "nu": jnp.zeros(p.shape, jnp.float32)})
-        return {"leaves": jax.tree.unflatten(treedef, state),
-                "count": jnp.zeros((), jnp.int32)}
+        out = {"leaves": jax.tree.unflatten(treedef, state),
+               "count": jnp.zeros((), jnp.int32)}
+        if cfg.precond_async:
+            # step index the in-flight refresh was dispatched at;
+            # NO_PENDING = nothing in flight (swap cond never taken)
+            out["pending_at"] = jnp.full((), base.NO_PENDING, jnp.int32)
+        return out
 
     def _polar_per_leaf(views, leaf_idx, key):
         """Legacy per-leaf dispatch: one polar chain per matrix leaf.
@@ -147,6 +173,15 @@ def make_muon(cfg: OptimizerConfig, axes_tree) -> base.Optimizer:
                 new_s[i] = {"mom": mom}
                 if cfg.precond_every > 1:
                     new_s[i]["ortho"] = s["ortho"]
+                if cfg.precond_async:
+                    # drift proxy (§12): accumulate the Frobenius
+                    # movement of the momentum (the matrix the cached
+                    # polar was computed from) since the last refresh
+                    # dispatch; read back as dnorm/rnorm by
+                    # base.precond_drift
+                    new_s[i]["dnorm"] = s["dnorm"] + jnp.sqrt(
+                        jnp.sum(jnp.square(mom - s["mom"])))
+                    new_s[i]["rnorm"] = s["rnorm"]
             else:
                 # AdamW for non-matrix params
                 b1, b2 = cfg.beta1, cfg.beta2
@@ -174,7 +209,37 @@ def make_muon(cfg: OptimizerConfig, axes_tree) -> base.Optimizer:
                 return bucketing.polar_bucketed(views, cfg, key), None
             return _polar_per_leaf(views, leaf_idx, key)
 
-        if cfg.precond_every > 1 and views:
+        if cfg.precond_async and views:
+            # §12 steady state: NEVER compute polars here.  Serve the
+            # active cache, except when an in-flight refresh has had
+            # precond_swap_delay steps to land — then ONE lax.cond swaps
+            # every leaf's pending buffer in (a local per-shard select,
+            # no matfn launches, no collectives).
+            pend = [flat_s[i]["ortho_p"] for i in leaf_idx]
+            act = [flat_s[i]["ortho"] for i in leaf_idx]
+            pending_at = state["pending_at"]
+            do_swap = (pending_at > base.NO_PENDING) & (
+                state["count"] >= pending_at + cfg.precond_swap_delay)
+            none_pending = jnp.full((), base.NO_PENDING, jnp.int32)
+            if telemetry:
+                it_p = [flat_s[i]["iters_p"] for i in leaf_idx]
+                it_a = [flat_s[i]["iters"] for i in leaf_idx]
+                polars, its, new_pending_at = jax.lax.cond(
+                    do_swap,
+                    lambda: (pend, it_p, none_pending),
+                    lambda: (act, it_a, pending_at))
+            else:
+                its = None
+                polars, new_pending_at = jax.lax.cond(
+                    do_swap,
+                    lambda: (pend, none_pending),
+                    lambda: (act, pending_at))
+            for j, i in enumerate(leaf_idx):
+                new_s[i]["ortho"] = polars[j]
+                new_s[i]["ortho_p"] = pend[j]
+                if telemetry:
+                    new_s[i]["iters_p"] = it_p[j]
+        elif cfg.precond_every > 1 and views:
             cache_dt = jnp.dtype(cfg.cache_dtype)
             cached = [flat_s[i]["ortho"] for i in leaf_idx]
             cached_it = ([flat_s[i]["iters"] for i in leaf_idx]
@@ -214,8 +279,48 @@ def make_muon(cfg: OptimizerConfig, axes_tree) -> base.Optimizer:
             p32 = p.astype(jnp.float32) * (1.0 - lr * cfg.weight_decay) \
                 - lr * upd
             new_p[i] = p32.astype(p.dtype)
-        return (jax.tree.unflatten(treedef, new_p),
-                {"leaves": jax.tree.unflatten(treedef, new_s),
-                 "count": state["count"] + 1})
+        out_state = {"leaves": jax.tree.unflatten(treedef, new_s),
+                     "count": state["count"] + 1}
+        if cfg.precond_async:
+            out_state["pending_at"] = (new_pending_at if views
+                                       else state["pending_at"])
+        return jax.tree.unflatten(treedef, new_p), out_state
 
-    return base.Optimizer(init, update)
+    def refresh(state, key):
+        """§12 refresh plane: recompute the pending polar buffers from
+        the STORED momentum (the matrix the active cache will have been
+        computed from by swap time) as one standalone jittable program.
+        Returns per-slot partial dicts for base.install_pending."""
+        slots, _ = base._flat_slots(state["leaves"])
+        flat_a = jax.tree.leaves(
+            axes_tree, is_leaf=lambda t: isinstance(t, tuple) and
+            all(isinstance(x, (str, type(None))) for x in t))
+        views, idx = [], []
+        for i, (s, a) in enumerate(zip(slots, flat_a)):
+            if "ortho_p" in s:
+                M, _meta = base.to_matrix_view(s["mom"], a)
+                views.append(M)
+                idx.append(i)
+        partials: list = [{} for _ in slots]
+        if not views:
+            return partials
+        outs, its = bucketing.polar_refresh(views, cfg, key)
+        cache_dt = jnp.dtype(cfg.cache_dtype)
+        for j, i in enumerate(idx):
+            # zero-slice guard: the bootstrap dispatch runs before any
+            # update, so the momentum can be exactly zero — the PRISM
+            # alpha fit on zero traces is 0/0.  A zero matrix's polar
+            # serves as zero (a no-op update), not NaN.
+            nrm = jnp.sqrt(jnp.sum(jnp.square(views[j]), axis=(-2, -1),
+                                   keepdims=True))
+            O = jnp.where(nrm > 0, outs[j], jnp.zeros_like(outs[j]))
+            p = {"ortho_p": O.astype(cache_dt),
+                 # drift baseline resets to the dispatched matrix
+                 "rnorm": jnp.sqrt(jnp.sum(jnp.square(views[j]))),
+                 "dnorm": jnp.zeros((), jnp.float32)}
+            if telemetry:
+                p["iters_p"] = its[j]
+            partials[i] = p
+        return partials
+
+    return base.Optimizer(init, update, refresh)

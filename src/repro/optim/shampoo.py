@@ -36,6 +36,16 @@ Adaptive early stopping (DESIGN.md §11): ``cfg.matfn_tol`` lets each
 inverse-root bucket iterate only until its slowest slice certifies;
 the realized counts ride in the state as "Linv_iters"/"Rinv_iters"
 (``cfg.matfn_telemetry``), refreshed together with the caches.
+
+Async refresh plane (DESIGN.md §12): with ``cfg.precond_async`` the
+inverse-root chains never run inside ``update``.  Full-matrix sides
+carry pending "Linv_p"/"Rinv_p" twins recomputed by the standalone
+``refresh`` member (from the stored EMA factors) and swapped
+pending -> active under one lax.cond after ``precond_swap_delay``
+steps; the update accumulates the joint-side drift proxy
+("dnorm"/"rnorm", Frobenius movement of the cached L/R factors) for
+the drift-triggered schedule.  Diagonal fallback sides are exempt —
+they are recomputed exactly every step either way.
 """
 from __future__ import annotations
 
@@ -122,24 +132,41 @@ def make_shampoo(cfg: OptimizerConfig, axes_tree,
                         s["Rinv_iters"] = jnp.zeros(lead, jnp.int32)
                 else:
                     s["diagR"] = jnp.zeros(lead + (n,), jnp.float32)
+                if cfg.precond_async:
+                    # §12 double buffer: pending twins for the cached
+                    # sides + the joint-side drift-proxy scalars
+                    if "Linv" in s:
+                        s["Linv_p"] = jnp.zeros_like(s["Linv"])
+                        if telemetry:
+                            s["Linv_iters_p"] = jnp.zeros(lead, jnp.int32)
+                    if "Rinv" in s:
+                        s["Rinv_p"] = jnp.zeros_like(s["Rinv"])
+                        if telemetry:
+                            s["Rinv_iters_p"] = jnp.zeros(lead, jnp.int32)
+                    if "Linv" in s or "Rinv" in s:
+                        s["dnorm"] = jnp.zeros((), jnp.float32)
+                        s["rnorm"] = jnp.zeros((), jnp.float32)
                 state.append(s)
             else:
                 state.append({"mom": mom,
                               "nu": jnp.zeros(pp.shape, jnp.float32)})
-        return {"leaves": jax.tree.unflatten(treedef, state),
-                "count": jnp.zeros((), jnp.int32)}
+        out = {"leaves": jax.tree.unflatten(treedef, state),
+               "count": jnp.zeros((), jnp.int32)}
+        if cfg.precond_async:
+            out["pending_at"] = jnp.full((), base.NO_PENDING, jnp.int32)
+        return out
 
-    def _inv_roots_bucketed(mats, prevs, prev_its, recompute, key):
-        """All buckets under ONE recompute cond: the cache-hit branch
-        returns the per-leaf cached inverses untouched, so steps between
-        recomputes move zero preconditioner bytes (no gather/scatter).
-        A static (Python bool) ``recompute`` picks the branch at trace
-        time instead — the skip variant contains no inverse-root ops.
-        Returns (invs, its); ``its`` is None unless telemetry (stale
-        steps then carry the previous refresh's counts)."""
+    def _fresh_invs(jobs, key):
+        """Freshly computed inverse roots for ``jobs`` — the single body
+        shared by the in-step recompute branch AND the §12 refresh plane,
+        so the two can never drift apart.  ``jobs`` is a flat list of
+        ``(slot, "Linv"/"Rinv", A, side)``; returns ``(invs, its)`` with
+        ``its`` None unless telemetry.  Bucketed: one batched call per
+        shape bucket across ALL jobs, keys folded by bucket; per-leaf:
+        keys folded by (slot, side)."""
         cache_dt = jnp.dtype(cfg.cache_dtype)
-
-        def compute():
+        mats = [A for (_, _, A, _) in jobs]
+        if cfg.bucketed:
             def one_bucket(stacked, b, bi):
                 kk = (jax.random.fold_in(key, bi)
                       if key is not None else None)
@@ -154,47 +181,42 @@ def make_shampoo(cfg: OptimizerConfig, axes_tree,
             out = bucketing.transform_bucketed(mats, one_bucket, cfg,
                                                with_aux=telemetry)
             return out if telemetry else (out, None)
+        outs, its = [], []
+        for (i, _, A, side) in jobs:
+            kk = jax.random.fold_in(key, i) if key is not None else None
+            if kk is not None and side:
+                kk = jax.random.fold_in(kk, 1)
+            if telemetry:
+                inv, it = _inv_root(A, p_root, cfg, kk, with_iters=True)
+                outs.append(inv.astype(cache_dt))
+                its.append(it)
+            else:
+                outs.append(_inv_root(A, p_root, cfg, kk).astype(cache_dt))
+        return outs, (its if telemetry else None)
 
+    def _inv_roots(jobs, prevs, prev_its, recompute, key):
+        """The in-step staleness schedule: all jobs under ONE recompute
+        cond — the cache-hit branch returns the per-leaf cached inverses
+        untouched, so steps between recomputes move zero preconditioner
+        bytes.  A static (Python bool) ``recompute`` picks the branch at
+        trace time instead — the skip variant contains no inverse-root
+        ops."""
         def stale():
             return list(prevs), (list(prev_its) if telemetry else None)
+
+        def compute():
+            return _fresh_invs(jobs, key)
 
         if isinstance(recompute, bool):
             return compute() if recompute else stale()
         return jax.lax.cond(recompute, compute, stale)
-
-    def _inv_roots_per_leaf(mats, prevs, prev_its, recompute, keys):
-        cache_dt = jnp.dtype(cfg.cache_dtype)
-
-        def one(A, kk):
-            if telemetry:
-                inv, it = _inv_root(A, p_root, cfg, kk, with_iters=True)
-                return inv.astype(cache_dt), it
-            return _inv_root(A, p_root, cfg, kk).astype(cache_dt), None
-
-        if isinstance(recompute, bool):
-            if not recompute:
-                return list(prevs), (list(prev_its) if telemetry else None)
-            outs = [one(A, kk) for A, kk in zip(mats, keys)]
-            return ([o for o, _ in outs],
-                    [it for _, it in outs] if telemetry else None)
-        outs, its = [], []
-        for A, prev, prev_it, kk in zip(mats, prevs, prev_its, keys):
-            got = jax.lax.cond(
-                recompute,
-                lambda A=A, kk=kk: one(A, kk)[:(2 if telemetry else 1)],
-                lambda prev=prev, prev_it=prev_it:
-                    (prev, prev_it) if telemetry else (prev,))
-            outs.append(got[0])
-            if telemetry:
-                its.append(got[1])
-        return outs, (its if telemetry else None)
 
     def update(grads, state, params, step, key, refresh=None):
         flat_g, flat_a, treedef = _flatten_with_axes(grads, axes_tree)
         flat_p = jax.tree.leaves(params)
         flat_s = treedef.flatten_up_to(state["leaves"])
         lr = cfg.learning_rate
-        every = max(cfg.precond_every, cfg.precondition_every)
+        every = base.resolve_refresh_period(cfg, "shampoo")
         recompute = (refresh if isinstance(refresh, bool)
                      else (state["count"] % every) == 0)
         beta2 = 0.999
@@ -233,25 +255,59 @@ def make_shampoo(cfg: OptimizerConfig, axes_tree,
                              s.get("Rinv_iters"), 1))
             else:
                 ns["diagR"] = beta2 * s["diagR"] + jnp.sum(G * G, axis=-2)
+            if cfg.precond_async and ("L" in s or "R" in s):
+                # drift proxy (§12): joint Frobenius movement of the
+                # cached EMA factors since the last refresh dispatch
+                dsq = jnp.zeros((), jnp.float32)
+                if "L" in s:
+                    dsq = dsq + jnp.sum(jnp.square(ns["L"] - s["L"]))
+                if "R" in s:
+                    dsq = dsq + jnp.sum(jnp.square(ns["R"] - s["R"]))
+                ns["dnorm"] = s["dnorm"] + jnp.sqrt(dsq)
+                ns["rnorm"] = s["rnorm"]
             matrix.append((i, G, meta))
             new_s[i] = ns
         # inverse roots: one batched call per shape bucket across ALL
         # leaves' L and R factors (per-leaf loop behind cfg.bucketed=False)
-        mats = [A for (_, _, A, _, _, _) in jobs]
         prevs = [prev for (_, _, _, prev, _, _) in jobs]
         prev_its = [it for (_, _, _, _, it, _) in jobs]
-        if cfg.bucketed:
-            invs, its = _inv_roots_bucketed(mats, prevs, prev_its,
-                                            recompute, key)
+        new_pending_at = None
+        if cfg.precond_async:
+            # §12 steady state: no inverse-root work in-step.  Serve the
+            # active caches, or — once the in-flight refresh has had
+            # precond_swap_delay steps to land — swap every pending twin
+            # in under ONE lax.cond (a local per-shard select).
+            pending_at = state["pending_at"]
+            new_pending_at = pending_at
+            if jobs:
+                pend = [flat_s[i][name + "_p"]
+                        for (i, name, _, _, _, _) in jobs]
+                do_swap = (pending_at > base.NO_PENDING) & (
+                    state["count"] >= pending_at + cfg.precond_swap_delay)
+                none_pending = jnp.full((), base.NO_PENDING, jnp.int32)
+                if telemetry:
+                    it_p = [flat_s[i][name + "_iters_p"]
+                            for (i, name, _, _, _, _) in jobs]
+                    invs, its, new_pending_at = jax.lax.cond(
+                        do_swap,
+                        lambda: (pend, it_p, none_pending),
+                        lambda: (list(prevs), list(prev_its), pending_at))
+                else:
+                    its = None
+                    invs, new_pending_at = jax.lax.cond(
+                        do_swap,
+                        lambda: (pend, none_pending),
+                        lambda: (list(prevs), pending_at))
+                for j, (i, name, _, _, _, _) in enumerate(jobs):
+                    new_s[i][name + "_p"] = pend[j]
+                    if telemetry:
+                        new_s[i][name + "_iters_p"] = it_p[j]
+            else:
+                invs, its = [], ([] if telemetry else None)
         else:
-            keys = []
-            for (i, _, _, _, _, side) in jobs:
-                kk = jax.random.fold_in(key, i) if key is not None else None
-                if kk is not None and side:
-                    kk = jax.random.fold_in(kk, 1)
-                keys.append(kk)
-            invs, its = _inv_roots_per_leaf(mats, prevs, prev_its,
-                                            recompute, keys)
+            jobs4 = [(i, name, A, side)
+                     for (i, name, A, _, _, side) in jobs]
+            invs, its = _inv_roots(jobs4, prevs, prev_its, recompute, key)
         for j, (i, name, _, _, _, _) in enumerate(jobs):
             new_s[i][name] = invs[j]
             if telemetry:
@@ -280,8 +336,41 @@ def make_shampoo(cfg: OptimizerConfig, axes_tree,
             p32 = pp.astype(jnp.float32) * (1.0 - lr * cfg.weight_decay) \
                 - lr * mom
             new_p[i] = p32.astype(pp.dtype)
-        return (jax.tree.unflatten(treedef, new_p),
-                {"leaves": jax.tree.unflatten(treedef, new_s),
-                 "count": state["count"] + 1})
+        out_state = {"leaves": jax.tree.unflatten(treedef, new_s),
+                     "count": state["count"] + 1}
+        if cfg.precond_async:
+            out_state["pending_at"] = new_pending_at
+        return jax.tree.unflatten(treedef, new_p), out_state
 
-    return base.Optimizer(init, update)
+    def refresh(state, key):
+        """§12 refresh plane: recompute the pending inverse-root twins
+        from the STORED EMA factors as one standalone jittable program.
+        Returns per-slot partial dicts for base.install_pending."""
+        slots, _ = base._flat_slots(state["leaves"])
+        partials: list = [{} for _ in slots]
+        jobs = []
+        for i, s in enumerate(slots):
+            if "Linv_p" in s:
+                jobs.append((i, "Linv", s["L"], 0))
+            if "Rinv_p" in s:
+                jobs.append((i, "Rinv", s["R"], 1))
+        if not jobs:
+            return partials
+        invs, its = _fresh_invs(jobs, key)
+        for j, (i, name, _, _) in enumerate(jobs):
+            partials[i][name + "_p"] = invs[j]
+            if telemetry:
+                partials[i][name + "_iters_p"] = its[j]
+        for i, s in enumerate(slots):
+            if partials[i]:
+                # drift baseline resets to the dispatched factors
+                rsq = jnp.zeros((), jnp.float32)
+                if "Linv_p" in s:
+                    rsq = rsq + jnp.sum(jnp.square(s["L"]))
+                if "Rinv_p" in s:
+                    rsq = rsq + jnp.sum(jnp.square(s["R"]))
+                partials[i]["rnorm"] = jnp.sqrt(rsq)
+                partials[i]["dnorm"] = jnp.zeros((), jnp.float32)
+        return partials
+
+    return base.Optimizer(init, update, refresh)

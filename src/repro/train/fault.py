@@ -55,6 +55,19 @@ class Watchdog:
         return self.check(now) in ("stale", "regressed")
 
 
+def discard_inflight(opt_state):
+    """Mark any in-flight pending preconditioner stale after a restore
+    (DESIGN.md §12).  Checkpoints drop the pending buffers
+    (checkpoint.save(drop=optim.base.PENDING_STATE_KEYS)), so a resumed
+    run holds zeros there; clearing ``pending_at`` guarantees the swap
+    cond never consumes them — the async service re-bootstraps on the
+    first post-restore step instead.  No-op for states without a refresh
+    plane, so the trainer calls it unconditionally."""
+    from repro.optim import base
+
+    return base.discard_pending(opt_state)
+
+
 def latest_restart_point(ckpt_dir: str) -> Optional[int]:
     """Step to restart from after a fault (newest COMPLETE checkpoint —
     crash-mid-write temp dirs are ignored by construction)."""

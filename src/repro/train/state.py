@@ -56,6 +56,11 @@ def make_train_step(model: Model, opt: base.Optimizer,
         params, opt_state = opt.update(grads, opt_state, params, step, key,
                                        refresh=refresh)
         metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        if ocfg.precond_async:
+            # §12: surface the cached-preconditioner drift proxy so the
+            # host-side AsyncPrecondService can trigger refreshes (a few
+            # scalars — free next to the loss readback)
+            metrics["precond_drift"] = base.precond_drift(opt_state)
         return params, opt_state, metrics
 
     return train_step
@@ -80,17 +85,20 @@ def opt_state_shardings(mesh, opt: base.Optimizer, param_shapes,
                 for k, v in state_shapes.items()}
 
     is_slot = lambda x: isinstance(x, dict) and "mom" in x
-    from repro.launch.sharding import precond_cache_sharding
+    from repro.launch.sharding import (PRECOND_CACHE_STATE_KEYS,
+                                       precond_cache_sharding)
 
     def per_param(slot, pshape, pshard):
         out = {}
         for k, v in slot.items():
             if tuple(v.shape) == tuple(pshape.shape):
                 out[k] = pshard
-            elif k in ("ortho", "Linv", "Rinv") and len(v.shape) >= 2:
+            elif k in PRECOND_CACHE_STATE_KEYS and len(v.shape) >= 2:
                 # cached preconditioners whose layout differs from the
                 # param (matrix views / factor squares): ZeRO-style
-                # lead->model, rows->data instead of full replication
+                # lead->model, rows->data instead of full replication.
+                # Pending twins ("*_p", §12) shard identically, so the
+                # double-buffer swap is a local per-shard select.
                 out[k] = precond_cache_sharding(mesh, tuple(v.shape))
             else:
                 out[k] = rep
@@ -98,4 +106,6 @@ def opt_state_shardings(mesh, opt: base.Optimizer, param_shapes,
 
     leaves = jax.tree.map(per_param, state_shapes["leaves"], param_shapes,
                           param_shardings, is_leaf=is_slot)
-    return {"leaves": leaves, "count": rep}
+    # non-leaf scalars ("count", and "pending_at" under §12) replicate
+    return dict({k: rep for k in state_shapes if k != "leaves"},
+                leaves=leaves)

@@ -27,7 +27,8 @@ from repro import checkpoint as ckpt
 from repro.config import OptimizerConfig, TrainConfig
 from repro.data import DataConfig, make_batch_fn
 from repro.models.transformer import Model
-from repro.optim import make_optimizer
+from repro.optim import base, make_optimizer
+from repro.train import fault
 from repro.train.state import make_train_step, master_params
 
 
@@ -55,9 +56,21 @@ class Trainer:
         else:
             self.step_fn = jax.jit(step_fn, donate_argnums=(0, 1),
                                    static_argnums=(4,))
+        # §12 async refresh plane: a host-side service owns WHEN to
+        # dispatch the (separately jitted) refresh program; the step
+        # itself then always runs the refresh=False variant — steady
+        # state compiles with zero matrix-function launches.
+        self.precond = (base.AsyncPrecondService(self.opt, ocfg)
+                        if ocfg.precond_async else None)
+        self._last_drift = 0.0
         self._ckpt_thread = None
         self.step_times: list = []
         self.straggler_events = 0
+
+    @property
+    def matfn_telemetry(self) -> Dict[str, Any]:
+        """Refresh/drift counters of the async service ({} when sync)."""
+        return {} if self.precond is None else self.precond.matfn_telemetry
 
     # ------------------------------------------------------------- state
 
@@ -71,9 +84,15 @@ class Trainer:
         if ckpt.latest_step(cdir) is not None:
             params, opt_state, _ = self.init_state(seed)
             tree = {"params": params, "opt": opt_state}
-            step, restored = ckpt.restore(cdir, tree)
+            # pending buffers are dropped at save time (§12), so keep the
+            # freshly initialized zeros for any key absent on disk...
+            step, restored = ckpt.restore(
+                cdir, tree, allow_missing=base.PENDING_STATE_KEYS)
+            # ...and mark the refresh plane stale: a resumed run must
+            # never swap in a buffer it did not dispatch itself
+            opt_state = fault.discard_inflight(restored["opt"])
             print(f"[trainer] resumed from step {step}", flush=True)
-            return restored["params"], restored["opt"], step
+            return restored["params"], opt_state, step
         return self.init_state(seed)
 
     def _checkpoint(self, step: int, params, opt_state):
@@ -83,7 +102,11 @@ class Trainer:
             self.tcfg.checkpoint_dir, step,
             {"params": params, "opt": opt_state},
             keep=self.tcfg.keep_checkpoints,
-            async_write=self.tcfg.async_checkpoint)
+            async_write=self.tcfg.async_checkpoint,
+            # in-flight pending preconditioners are schedule-local state:
+            # dropping them keeps checkpoints smaller and restore marks
+            # the plane stale anyway (discard_inflight)
+            drop=base.PENDING_STATE_KEYS)
 
     # ------------------------------------------------------------- loop
 
@@ -94,19 +117,32 @@ class Trainer:
         hb_path = os.path.join(self.tcfg.checkpoint_dir, "HEARTBEAT")
         os.makedirs(self.tcfg.checkpoint_dir, exist_ok=True)
         losses = []
-        # effective staleness period: shampoo honors its legacy knob too,
-        # so the static schedule matches the dynamic in-state one
-        K = self.ocfg.precond_every
-        if self.ocfg.name == "shampoo":
-            K = max(K, self.ocfg.precondition_every)
+        # effective staleness period (shared with the optimizers and the
+        # async service via the single resolve_refresh_period helper)
+        K = base.resolve_refresh_period(self.ocfg)
         for t in range(start, steps):
             t0 = time.perf_counter()
             batch = self.batch_fn(jnp.asarray(t))
-            refresh = (t % K == 0) if K > 1 else None
+            if self.precond is not None:
+                # §12 two-phase step.  Phase 1: maybe dispatch a refresh
+                # (non-blocking — the chains overlap the step below);
+                # drift is read from the PREVIOUS step's metrics, so no
+                # extra device sync here.  Phase 2: the step itself, with
+                # refresh=False pinned statically — the only compiled
+                # step variant, and it contains zero matfn launches.
+                opt_state = self.precond.step_begin(
+                    opt_state, t,
+                    jax.random.fold_in(jax.random.PRNGKey(1), t),
+                    drift=self._last_drift)
+                refresh = False
+            else:
+                refresh = (t % K == 0) if K > 1 else None
             params, opt_state, metrics = self.step_fn(
                 params, opt_state, batch, jnp.asarray(t, jnp.int32),
                 refresh)
             jax.block_until_ready(metrics["loss"])
+            if self.precond is not None:
+                self._last_drift = float(metrics["precond_drift"])
             dt = time.perf_counter() - t0
             if t > start:  # exclude compile step from straggler stats
                 self.step_times.append(dt)

@@ -77,3 +77,72 @@ def test_int8_psum_shard_map():
                          cwd="/root/repo", env=env, capture_output=True,
                          text=True, timeout=300)
     assert "INT8_PSUM_OK" in out.stdout, out.stdout + out.stderr[-2000:]
+
+
+# ------------------------------------------- async refresh plane (§12)
+
+
+def test_restore_discards_inflight_pending(tmp_path):
+    """A checkpoint written mid-interval (refresh dispatched, swap not
+    yet due) excludes the pending payloads; the restore keeps the
+    init-state zeros for them and discard_inflight clears pending_at —
+    so the resumed run never swaps in a buffer it did not dispatch."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import checkpoint as ckpt
+    from repro.config import OptimizerConfig, PrismConfig
+    from repro.optim import base, make_optimizer
+    from repro.train.fault import discard_inflight
+
+    key = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(key, (48, 32))}
+    axes = {"w": ("embed", "mlp")}
+    cfg = OptimizerConfig(name="muon", learning_rate=0.05,
+                          precond_every=4, precond_async=True,
+                          precond_swap_delay=2,
+                          prism=PrismConfig(degree=2, iterations=3,
+                                            warm_alpha_iters=1,
+                                            sketch_dim=8))
+    opt = make_optimizer(cfg, axes)
+    p, s = params, opt.init(params)
+    # two steps, then a refresh dispatched at t=2 whose swap is due at
+    # t=4 — checkpoint lands mid-interval at t=3
+    for t in range(3):
+        if t == 2:
+            s = base.install_pending(s, opt.refresh(s, key), at_step=2)
+        g = jax.tree.map(lambda q: 0.1 * jnp.ones_like(q), params)
+        p, s = opt.update(g, s, p, t, jax.random.fold_in(key, t),
+                          refresh=False)
+    assert int(s["pending_at"]) == 2
+    ckpt.save(str(tmp_path), 3, {"opt": s}, drop=base.PENDING_STATE_KEYS)
+    # on-disk file really excludes every pending payload
+    data = np.load(tmp_path / "step_00000003" / "tree.npz")
+    assert not any(base.PENDING_STATE_KEYS.intersection(k.split("|"))
+                   for k in data.files)
+    # restore into a fresh init target; pending keys fall back to zeros
+    target = {"opt": opt.init(params)}
+    _, restored = ckpt.restore(str(tmp_path), target,
+                               allow_missing=base.PENDING_STATE_KEYS)
+    rs = discard_inflight(restored["opt"])
+    assert int(rs["pending_at"]) == base.NO_PENDING
+    slot = base._flat_slots(rs["leaves"])[0][0]
+    np.testing.assert_array_equal(np.asarray(slot["ortho_p"], np.float32),
+                                  0.0)
+    # non-pending state round-trips exactly (mom, active cache, count)
+    orig = base._flat_slots(s["leaves"])[0][0]
+    np.testing.assert_array_equal(np.asarray(slot["mom"]),
+                                  np.asarray(orig["mom"]))
+    np.testing.assert_array_equal(np.asarray(slot["ortho"]),
+                                  np.asarray(orig["ortho"]))
+    # the resumed run never consumes the zeroed pending buffer: the swap
+    # cond stays untaken on the very step the old swap was due
+    p2, s2 = opt.update(jax.tree.map(lambda q: 0.1 * jnp.ones_like(q),
+                                     params),
+                        rs, params, 4, jax.random.fold_in(key, 4),
+                        refresh=False)
+    assert int(s2["pending_at"]) == base.NO_PENDING
+    slot2 = base._flat_slots(s2["leaves"])[0][0]
+    np.testing.assert_array_equal(np.asarray(slot2["ortho"]),
+                                  np.asarray(orig["ortho"]))
