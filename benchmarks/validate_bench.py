@@ -274,9 +274,112 @@ def validate_async_precond(doc: dict, name: str):
     return errs
 
 
+PIPELINE_TRAIN_TOP = {
+    "benchmark": lambda x: x == "pipeline_train",
+    "backend": lambda x: isinstance(x, str) and x,
+    "seq_len": _pos_int,
+    "global_batch": _pos_int,
+    "notes": _str_list,
+    "results": lambda x: isinstance(x, list) and x,
+    "launches": lambda x: isinstance(x, list) and x,
+}
+
+PIPELINE_TRAIN_ROW = {
+    "model": lambda x: isinstance(x, str) and x,
+    "stages": lambda x: _pos_int(x) and x > 1,
+    "n_micro": _pos_int,
+    "seq_len": _pos_int,
+    "global_batch": _pos_int,
+    "steps": _pos_int,
+    "ticks": _pos_int,
+    "bubble_fraction": lambda x: _is_num(x) and 0.0 <= x < 1.0,
+    "step_s": lambda x: isinstance(x, list) and x and all(
+        _is_num(s) and s > 0 for s in x),
+    "tokens_per_sec": lambda x: _is_num(x) and x > 0,
+    "total_s": lambda x: _is_num(x) and x > 0,
+    "losses": lambda x: isinstance(x, list) and x and all(
+        _is_num(s) for s in x),
+}
+
+PIPELINE_TRAIN_LAUNCH_ROW = {
+    "model": lambda x: isinstance(x, str) and x,
+    "stages": lambda x: _pos_int(x) and x > 1,
+    "n_micro": _pos_int,
+    # the §12/§13 composition contract: the steady async pipeline step
+    # compiles with ZERO matfn launches — every chain lives in the
+    # refresh program dispatched into the 1F1B bubbles.  Regenerating
+    # under REPRO_KERNEL_MODE=ref skips counting and is rejected here.
+    "steady_matfn_launches": lambda x: x == 0 and not isinstance(x, bool),
+    "refresh_matfn_launches": _pos_int,
+}
+
+
+def validate_pipeline_train(doc: dict, name: str):
+    errs = []
+    for field, ok in PIPELINE_TRAIN_TOP.items():
+        if field not in doc:
+            errs.append(f"{name}: missing top-level field {field!r}")
+        elif not ok(doc[field]):
+            errs.append(f"{name}: bad top-level {field}={doc[field]!r}")
+    rows = [r for r in (doc.get("results") or []) if isinstance(r, dict)]
+    for i, row in enumerate(doc.get("results") or []):
+        where = f"{name}: results[{i}]"
+        if not isinstance(row, dict):
+            errs.append(f"{where} is not an object")
+            continue
+        for field, ok in PIPELINE_TRAIN_ROW.items():
+            if field not in row:
+                errs.append(f"{where}: missing field {field!r}")
+            elif not ok(row[field]):
+                errs.append(f"{where}: bad value {field}={row[field]!r}")
+        # the analytic 1F1B schedule model (DESIGN.md §13)
+        if all(_is_num(row.get(k)) for k in ("ticks", "stages", "n_micro",
+                                             "bubble_fraction")):
+            T = row["n_micro"] + 2 * (row["stages"] - 1)
+            if row["ticks"] != T:
+                errs.append(f"{where}: ticks != n_micro + 2*(stages-1) "
+                            f"({row['ticks']} vs {T})")
+            b = 2.0 * (row["stages"] - 1) / T
+            if abs(row["bubble_fraction"] - b) > 1e-9:
+                errs.append(f"{where}: bubble_fraction off the model "
+                            f"({row['bubble_fraction']} vs {b})")
+    # the trajectory must cover >= 2 models, and at fixed (model, depth)
+    # the bubble fraction must strictly DECREASE in n_micro
+    if len({r.get("model") for r in rows}) < 2:
+        errs.append(f"{name}: needs >= 2 models in results")
+    groups: dict = {}
+    for r in rows:
+        groups.setdefault((r.get("model"), r.get("stages")), []).append(r)
+    for (m, s), rs in groups.items():
+        rs = sorted(rs, key=lambda r: r.get("n_micro", 0))
+        for a, b in zip(rs, rs[1:]):
+            if not (_is_num(a.get("bubble_fraction"))
+                    and _is_num(b.get("bubble_fraction"))):
+                continue
+            if not b["bubble_fraction"] < a["bubble_fraction"]:
+                errs.append(f"{name}: bubble_fraction must decrease in "
+                            f"n_micro for {m} S={s}")
+    lrows = [r for r in (doc.get("launches") or [])
+             if isinstance(r, dict)]
+    for i, row in enumerate(doc.get("launches") or []):
+        where = f"{name}: launches[{i}]"
+        if not isinstance(row, dict):
+            errs.append(f"{where} is not an object")
+            continue
+        for field, ok in PIPELINE_TRAIN_LAUNCH_ROW.items():
+            if field not in row:
+                errs.append(f"{where}: missing field {field!r}")
+            elif not ok(row[field]):
+                errs.append(f"{where}: bad value {field}={row[field]!r}")
+    if len({r.get("model") for r in lrows}) < 2:
+        errs.append(f"{name}: needs the launch contract for >= 2 models")
+    return errs
+
+
 VALIDATORS = {
     "BENCH_batched_matfn.json": validate_batched_matfn,
     "BENCH_async_precond.json": validate_async_precond,
+    "BENCH_pipeline_train.json": validate_pipeline_train,
 }
 
 

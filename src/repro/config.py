@@ -471,3 +471,14 @@ class TrainConfig:
     seed: int = 0
     straggler_slack: float = 3.0  # flag steps slower than slack x median
     keep_checkpoints: int = 3
+    # 1F1B pipeline parallelism over the "pod" mesh axis (launch/pipeline.py):
+    # >1 slices the layer stack into that many stages; n_micro microbatches
+    # fill the schedule (bubble fraction 2(S-1)/(n_micro+2(S-1))).
+    pipeline_stages: int = 1
+    n_micro: int = 4
+
+    def __post_init__(self):
+        if self.pipeline_stages < 1:
+            raise ValueError("pipeline_stages must be >= 1")
+        if self.pipeline_stages > 1 and self.n_micro < 1:
+            raise ValueError("n_micro must be >= 1 when pipelining")

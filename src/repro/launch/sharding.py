@@ -178,8 +178,35 @@ def activation_rules(cfg: ModelConfig, mesh: Mesh,
     }
 
 
-def train_batch_shardings(mesh: Mesh, cfg: ModelConfig):
-    b = batch_axes(mesh)
+def pipeline_rules(rules: Dict[str, Any]) -> Dict[str, Any]:
+    """Adapt a param/activation rules dict for 1F1B pipelining over "pod"
+    (launch/pipeline.py):
+
+    * ``layers`` shards over pod — each pod holds exactly its stage's
+      slice of every [L, ...] stacked leaf, so the engine's [S, L/S, ...]
+      stage view is a layout-preserving reshape (no resharding);
+    * ``batch`` drops the pod axis — every stage needs all microbatch
+      tokens (stage 0 embeds them, the last stage reads targets), so DP
+      runs over data only;
+    * ``opt_batch`` pins the §8 preconditioner bucket partitioning to the
+      remaining (data,) axis (optim/bucketing.py::mesh_batch_axes) — pod
+      is a pipeline axis now, not a DP axis.
+    """
+    out = dict(rules)
+    if "layers" in out:
+        out["layers"] = "pod"
+    if "batch" in out:
+        b = out["batch"]
+        b = tuple(a for a in (b if isinstance(b, (tuple, list)) else (b,))
+                  if a not in (None, "pod"))
+        out["batch"] = b if b else None
+    out["opt_batch"] = ("data",)
+    return out
+
+
+def train_batch_shardings(mesh: Mesh, cfg: ModelConfig,
+                          pipeline: bool = False):
+    b = ("data",) if pipeline else batch_axes(mesh)
     out = {"tokens": NamedSharding(mesh, P(b, None, None))
            if cfg.family == "audio" else NamedSharding(mesh, P(b, None))}
     if cfg.family == "vlm":

@@ -49,6 +49,16 @@ def main():
     ap.add_argument("--precond_every", type=int, default=1,
                     help="staleness period K: refresh matrix "
                          "preconditioners every K steps (DESIGN.md §8)")
+    ap.add_argument("--precond_async", action="store_true",
+                    help="drive refreshes from the host-side async "
+                         "service (§12) — in pipeline runs the chains "
+                         "land in the 1F1B bubbles")
+    ap.add_argument("--pipeline_stages", type=int, default=1,
+                    help="1F1B pipeline depth over the pod mesh axis "
+                         "(DESIGN.md §13); >1 requires --mesh "
+                         "production --multi_pod")
+    ap.add_argument("--n_micro", type=int, default=4,
+                    help="microbatches per step for the 1F1B schedule")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -58,16 +68,29 @@ def main():
         name=args.optimizer, learning_rate=args.lr,
         matfn_method=args.method, gradient_compression=args.compression,
         precond_every=args.precond_every,
+        precond_async=args.precond_async,
         prism=PrismConfig(degree=2, iterations=3, warm_alpha_iters=3,
                           sketch_dim=8))
     tcfg = TrainConfig(steps=args.steps, checkpoint_dir=args.ckpt_dir,
-                       checkpoint_every=args.ckpt_every, log_every=10)
+                       checkpoint_every=args.ckpt_every, log_every=10,
+                       pipeline_stages=args.pipeline_stages,
+                       n_micro=args.n_micro)
     dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
                       global_batch=args.batch)
 
+    pipelined = args.pipeline_stages > 1
     if args.mesh == "production":
-        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        mesh = make_production_mesh(multi_pod=args.multi_pod or pipelined)
         rules = sh.param_rules(cfg, mesh)
+        arules = sh.activation_rules(cfg, mesh)
+        if pipelined:
+            # 1F1B over pod (DESIGN.md §13): layer stack stage-sliced,
+            # batch sharded over data only, async refreshes land in the
+            # schedule bubbles
+            assert mesh.shape.get("pod", 1) == args.pipeline_stages, \
+                (dict(mesh.shape), args.pipeline_stages)
+            rules = sh.pipeline_rules(rules)
+            arules = sh.pipeline_rules(arules)
         pshapes = model.param_shapes()
         import jax.numpy as jnp
         master = jax.tree.map(
@@ -78,12 +101,13 @@ def main():
         opt = make_optimizer(ocfg, model.logical_axes())
         sshard = opt_state_shardings(mesh, opt, master, pshard)
         shardings = {"params": pshard, "opt": sshard,
-                     "batch": sh.train_batch_shardings(mesh, cfg)}
-        with mesh, activation_sharding(mesh,
-                                       sh.activation_rules(cfg, mesh)):
+                     "batch": sh.train_batch_shardings(
+                         mesh, cfg, pipeline=pipelined)}
+        with mesh, activation_sharding(mesh, arules):
             trainer = Trainer(model, ocfg, tcfg, dcfg, mesh, shardings)
             trainer.run(seed=args.seed)
     else:
+        assert not pipelined, "--pipeline_stages needs --mesh production"
         trainer = Trainer(model, ocfg, tcfg, dcfg)
         trainer.run(seed=args.seed)
 

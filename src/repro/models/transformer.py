@@ -376,7 +376,21 @@ class Model:
         x, aux = self._backbone(params, x, positions)
         if cfg.family == "vlm":
             x = x[:, batch["patches"].shape[1]:]
+        ce = self._ce_from_hidden(params, x, tokens, chunk)
+        loss = ce + aux
+        return loss, {"ce": ce, "aux": aux,
+                      "ppl_proxy": jnp.exp(jnp.minimum(ce, 20.0))}
 
+    def _ce_from_hidden(self, params, x, tokens,
+                        chunk: Optional[int] = None) -> jax.Array:
+        """Chunked next-token CE given backbone output x [B, S, D].
+
+        Factored out of ``loss`` so the last pipeline stage
+        (train/state.py) can seed CE from its local activations without
+        re-running the embedding path."""
+        chunk = chunk or self.cfg.loss_chunk
+        cfg = self.cfg
+        B = x.shape[0]
         if cfg.family == "audio":  # targets [B, K, S]
             tg = tokens[:, :, 1:]
             xs = x[:, :-1]
@@ -412,10 +426,7 @@ class Model:
 
         total, _ = jax.lax.scan(jax.checkpoint(ce_chunk), jnp.float32(0.0),
                                 jnp.arange(nb))
-        ce = total / (B * Sm1)
-        loss = ce + aux
-        return loss, {"ce": ce, "aux": aux,
-                      "ppl_proxy": jnp.exp(jnp.minimum(ce, 20.0))}
+        return total / (B * Sm1)
 
     # ------------------------------------------------------------- decode
 

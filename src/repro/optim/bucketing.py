@@ -230,8 +230,12 @@ def mesh_batch_axes(cfg: Optional[OptimizerConfig]):
     ctx = sharding_ctx.current()
     if ctx is None:
         return None, ()
-    mesh, _ = ctx
-    axes = tuple(a for a in ("pod", "data")
+    mesh, rules = ctx
+    # pipeline runs repurpose pod as a stage axis and install an
+    # "opt_batch" override (launch/sharding.py::pipeline_rules) so the
+    # bucket batch dim partitions over the remaining DP axes only
+    allowed = rules.get("opt_batch", ("pod", "data"))
+    axes = tuple(a for a in allowed
                  if a in mesh.axis_names and mesh.shape[a] > 1)
     return (mesh, axes) if axes else (None, ())
 

@@ -59,6 +59,23 @@ def activation_sharding(mesh, rules: Dict[str, Any]):
         _CTX.pop()
 
 
+@contextlib.contextmanager
+def suspend_activation_sharding():
+    """Temporarily disable activation constraints (trace-time scoped).
+
+    Used while tracing code that runs *inside* a shard_map body manual
+    over some mesh axis (the 1F1B pipeline stages): there,
+    ``with_sharding_constraint`` against the full mesh is illegal, and
+    GSPMD infers layouts for the remaining auto axes on its own."""
+    saved = list(_CTX)
+    _CTX.clear()
+    try:
+        yield
+    finally:
+        _CTX.clear()
+        _CTX.extend(saved)
+
+
 def current() -> Optional[Tuple[Any, Dict[str, Any]]]:
     return _CTX[-1] if _CTX else None
 

@@ -66,6 +66,130 @@ def make_train_step(model: Model, opt: base.Optimizer,
     return train_step
 
 
+PIPELINE_FAMILIES = ("dense", "moe", "ssm")
+
+
+def pipeline_split_params(params, n_stages: int):
+    """Split params into (shared, stage-stacked layers).
+
+    The master tree keeps the standard [L, ...] layer stacking — the
+    stage view [S, L/S, ...] is a pure reshape, so checkpoints are
+    stage-count independent (elastic across pipeline_stages).  When the
+    layer stack is sharded over "pod" on dim 0 (launch/sharding.py
+    pipeline rules), the reshape is layout-preserving: each pod already
+    holds exactly its stage slice."""
+    lay = params["layers"]
+    shared = {k: v for k, v in params.items() if k != "layers"}
+
+    def split(p):
+        L = p.shape[0]
+        assert L % n_stages == 0, (L, n_stages)
+        return p.reshape((n_stages, L // n_stages) + p.shape[1:])
+
+    return shared, jax.tree.map(split, lay)
+
+
+def pipeline_merge_layer_grads(g_lay_stacked):
+    """Inverse of pipeline_split_params on the layers subtree."""
+    return jax.tree.map(
+        lambda p: p.reshape((p.shape[0] * p.shape[1],) + p.shape[2:]),
+        g_lay_stacked)
+
+
+def make_pipeline_stage_fn(model: Model):
+    """Adapt Model to the one_f_one_b stage contract.
+
+    Every stage runs the same SPMD program: cast its fp32 master slices
+    to model dtypes, embed (first stage only, via lax.cond), run its
+    layer slice through the backbone, and seed its loss terms —
+    chunked CE on the last stage, per-stage MoE aux everywhere.  Shared
+    params travel replicated, so tied embeddings fall out of the psum
+    over stage gradients."""
+    cfg = model.cfg
+    assert cfg.family in PIPELINE_FAMILIES, cfg.family
+    dtypes = model.param_dtypes()
+    sh_dtypes = {k: v for k, v in dtypes.items() if k != "layers"}
+    lay_dtypes = dtypes["layers"]
+
+    def stage_fn(shared, lay, tokens, x, is_first, is_last):
+        shc = jax.tree.map(lambda a, t: a.astype(t), shared, sh_dtypes)
+        lac = jax.tree.map(lambda a, t: a.astype(t), lay, lay_dtypes)
+        x0 = jax.lax.cond(is_first,
+                          lambda: model._embed_tokens(shc, tokens),
+                          lambda: x)
+        mb, S = x0.shape[0], x0.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32),
+                                     (mb, S))
+        y, aux = model._backbone({"layers": lac}, x0, positions)
+        ce = jax.lax.cond(
+            is_last,
+            lambda: model._ce_from_hidden(shc, y, tokens),
+            lambda: jnp.float32(0.0))
+        return y, jnp.stack([ce, jnp.asarray(aux, jnp.float32)])
+
+    return stage_fn
+
+
+def pipeline_loss_and_grads(model: Model, mesh, n_micro: int,
+                            axis: str = "pod"):
+    """Build loss_and_grads(params, batch) -> (loss, grads, metrics)
+    running the 1F1B schedule over ``axis`` (launch/pipeline.py)."""
+    from repro.launch import pipeline
+
+    cfg = model.cfg
+    n_stages = mesh.shape[axis]
+    stage_fn = make_pipeline_stage_fn(model)
+
+    def loss_and_grads(params, batch):
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        assert B % n_micro == 0, (B, n_micro)
+        mb = B // n_micro
+        tok_micro = tokens.reshape(n_micro, mb, S)
+        shared, lay_stacked = pipeline_split_params(params, n_stages)
+        act = jax.ShapeDtypeStruct((mb, S, cfg.d_model),
+                                   jnp.dtype(cfg.dtype))
+        loss_parts, g_shared, g_lay = pipeline.pipeline_grads(
+            mesh, stage_fn, shared, lay_stacked, tok_micro, act,
+            n_micro, axis=axis)
+        grads = dict(g_shared, layers=pipeline_merge_layer_grads(g_lay))
+        ce, aux = loss_parts[0], loss_parts[1]
+        metrics = {"ce": ce, "aux": aux,
+                   "ppl_proxy": jnp.exp(jnp.minimum(ce, 20.0))}
+        return ce + aux, grads, metrics
+
+    return loss_and_grads
+
+
+def make_pipeline_train_step(model: Model, opt: base.Optimizer,
+                             ocfg: OptimizerConfig, mesh, n_micro: int,
+                             axis: str = "pod") -> Callable:
+    """1F1B variant of make_train_step (same signature/jit contract).
+
+    Gradients come out of the pipeline engine in fp32 (differentiated
+    wrt the fp32 masters), so ``grads_dtype="bfloat16"`` — a data-
+    parallel wire-format optimization — is not applicable here."""
+    assert ocfg.grads_dtype != "bfloat16", \
+        "pipeline training differentiates wrt fp32 masters"
+    loss_and_grads = pipeline_loss_and_grads(model, mesh, n_micro,
+                                             axis=axis)
+
+    def train_step(params, opt_state, batch, step, refresh=None):
+        loss, grads, metrics = loss_and_grads(params, batch)
+        grads, gnorm = base.clip_by_global_norm(grads, ocfg.grad_clip_norm)
+        if ocfg.gradient_compression == "int8":
+            grads = compression.int8_roundtrip(grads)
+        key = jax.random.fold_in(jax.random.PRNGKey(0), step)
+        params, opt_state = opt.update(grads, opt_state, params, step, key,
+                                       refresh=refresh)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        if ocfg.precond_async:
+            metrics["precond_drift"] = base.precond_drift(opt_state)
+        return params, opt_state, metrics
+
+    return train_step
+
+
 def opt_state_shardings(mesh, opt: base.Optimizer, param_shapes,
                         param_shardings):
     """Sharding tree for the optimizer state: per-param buffers matching

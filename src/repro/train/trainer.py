@@ -29,7 +29,8 @@ from repro.data import DataConfig, make_batch_fn
 from repro.models.transformer import Model
 from repro.optim import base, make_optimizer
 from repro.train import fault
-from repro.train.state import make_train_step, master_params
+from repro.train.state import (make_pipeline_train_step, make_train_step,
+                               master_params)
 
 
 class Trainer:
@@ -39,9 +40,24 @@ class Trainer:
         self.model = model
         self.ocfg, self.tcfg, self.dcfg = ocfg, tcfg, dcfg
         self.mesh = mesh
+        self.shardings = shardings
         self.opt = make_optimizer(ocfg, model.logical_axes())
         self.batch_fn = make_batch_fn(model.cfg, dcfg)
-        step_fn = make_train_step(model, self.opt, ocfg)
+        self.pipelined = tcfg.pipeline_stages > 1
+        if self.pipelined:
+            # 1F1B over the pod axis (launch/pipeline.py): requires the
+            # production-style mesh with pod == pipeline_stages
+            assert mesh is not None and "pod" in mesh.axis_names, \
+                "pipeline_stages > 1 needs a mesh with a pod axis"
+            assert mesh.shape["pod"] == tcfg.pipeline_stages, \
+                (mesh.shape, tcfg.pipeline_stages)
+            step_fn = make_pipeline_train_step(model, self.opt, ocfg,
+                                               mesh, tcfg.n_micro)
+        else:
+            step_fn = make_train_step(model, self.opt, ocfg)
+        # the unjitted step stays reachable for trace-only observability
+        # (benchmarks count its Pallas launches via ops.count_launches)
+        self.raw_step_fn = step_fn
         # refresh (arg 4) is static: with precond_every=K>1 the loop picks
         # the refresh/skip step variant per step in Python (exact at step
         # 0), and the skip variant compiles with ZERO matrix-function
@@ -134,6 +150,14 @@ class Trainer:
                     opt_state, t,
                     jax.random.fold_in(jax.random.PRNGKey(1), t),
                     drift=self._last_drift)
+                if self.shardings is not None and \
+                        self.precond.last_dispatch == t:
+                    # the refresh program's outputs carry compiler-chosen
+                    # shardings; pin the freshly installed pending
+                    # buffers back onto the step's expected layout (all
+                    # other leaves already match -> no-copy)
+                    opt_state = jax.device_put(opt_state,
+                                               self.shardings["opt"])
                 refresh = False
             else:
                 refresh = (t % K == 0) if K > 1 else None
@@ -152,8 +176,16 @@ class Trainer:
                     self.straggler_events += 1
                     print(f"[trainer] straggler: step {t} took {dt:.2f}s "
                           f"(median {med:.2f}s)", flush=True)
+            now = time.time()
             with open(hb_path, "w") as f:
-                f.write(f"{t} {time.time()}")
+                f.write(f"{t} {now}")
+            if self.pipelined:
+                # per-stage heartbeats: an external supervisor watching a
+                # single stage (the unit that fails on a real fleet) gets
+                # the same Watchdog-parseable "<step> <time>" contract
+                for s in range(self.tcfg.pipeline_stages):
+                    with open(f"{hb_path}.stage{s}", "w") as f:
+                        f.write(f"{t} {now}")
             loss = float(metrics["loss"])
             losses.append(loss)
             if t % self.tcfg.log_every == 0:

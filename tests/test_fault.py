@@ -1,5 +1,6 @@
-"""Watchdog + int8-psum shard_map collective tests."""
+"""Watchdog, int8-psum collective, and the kill/resume pipeline drill."""
 import os
+import signal
 import subprocess
 import sys
 import textwrap
@@ -24,6 +25,17 @@ def test_watchdog_states(tmp_path):
     wd2 = Watchdog(str(hb), WatchdogConfig(stale_after_s=1000))
     wd2.last_step = 6
     assert wd2.check() == "regressed"
+
+
+def test_watchdog_config_not_shared(tmp_path):
+    """Regression: the default WatchdogConfig must be per-instance — a
+    dataclass default instance shared across watchdogs would let one
+    watchdog's threshold tweak leak into every other."""
+    a = Watchdog(str(tmp_path / "a"))
+    b = Watchdog(str(tmp_path / "b"))
+    assert a.cfg is not b.cfg
+    a.cfg.stale_after_s = 1.0
+    assert b.cfg.stale_after_s == WatchdogConfig().stale_after_s
 
 
 def test_latest_restart_point(tmp_path):
@@ -146,3 +158,123 @@ def test_restore_discards_inflight_pending(tmp_path):
     slot2 = base._flat_slots(s2["leaves"])[0][0]
     np.testing.assert_array_equal(np.asarray(slot2["ortho"]),
                                   np.asarray(orig["ortho"]))
+
+
+# --------------------------------------- kill/resume pipeline drill (§13)
+
+
+def _drill_env():
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["REPRO_KERNEL_MODE"] = "ref"
+    env["PYTHONPATH"] = "src"
+    return env
+
+
+def _drill_cmd(ckpt_dir, steps, extra=()):
+    return [sys.executable, "-m", "repro.train.fault",
+            "--ckpt_dir", str(ckpt_dir), "--steps", str(steps),
+            "--ckpt_every", "2", *extra]
+
+
+def _losses(stdout):
+    """{step: hex_loss} from DRILL_LOSS lines."""
+    out = {}
+    for line in stdout.splitlines():
+        if line.startswith("DRILL_LOSS "):
+            _, t, h = line.split()
+            out[int(t)] = h
+    return out
+
+
+def _kill_after_checkpoint(ckpt_dir, proc, min_step=2, timeout_s=420):
+    """Poll the drill's heartbeat until a complete checkpoint >= min_step
+    exists AND the run has moved past it, then SIGKILL mid-step."""
+    wd = Watchdog(os.path.join(str(ckpt_dir), "HEARTBEAT"))
+    deadline = time.time() + timeout_s
+    while time.time() < deadline:
+        assert proc.poll() is None, \
+            "drill exited before the kill: " + proc.stdout.read()
+        hb = wd.read()
+        if hb is not None and hb[0] >= min_step and \
+                (latest_restart_point(str(ckpt_dir)) or 0) >= min_step:
+            proc.send_signal(signal.SIGKILL)
+            proc.wait(timeout=30)
+            return
+        time.sleep(0.2)
+    proc.kill()
+    raise AssertionError("drill never reached a killable checkpoint: "
+                         + proc.stdout.read())
+
+
+def test_kill_resume_bitwise(tmp_path):
+    """The tentpole drill: a pipeline training subprocess on the 8-device
+    (pod=2, data=2, model=2) host mesh is SIGKILLed mid-run; the relaunch
+    resumes from the newest complete checkpoint and its per-step losses
+    continue BITWISE (hex-compared) against an uninterrupted run — sync
+    preconditioners make resume exactly deterministic."""
+    steps = 5
+    ref_dir, kill_dir = tmp_path / "ref", tmp_path / "kill"
+    ref = subprocess.run(_drill_cmd(ref_dir, steps), env=_drill_env(),
+                         cwd="/root/repo", capture_output=True, text=True,
+                         timeout=560)
+    ref_losses = _losses(ref.stdout)
+    assert sorted(ref_losses) == list(range(steps)), \
+        ref.stdout + ref.stderr[-4000:]
+
+    proc = subprocess.Popen(_drill_cmd(kill_dir, steps), env=_drill_env(),
+                            cwd="/root/repo", stdout=subprocess.PIPE,
+                            stderr=subprocess.STDOUT, text=True)
+    _kill_after_checkpoint(kill_dir, proc)
+    pre = _losses(proc.stdout.read())
+    # the pre-kill prefix already matches the reference bitwise
+    for t, h in pre.items():
+        assert h == ref_losses[t], (t, h, ref_losses[t])
+
+    resumed = subprocess.run(_drill_cmd(kill_dir, steps),
+                             env=_drill_env(), cwd="/root/repo",
+                             capture_output=True, text=True, timeout=560)
+    assert "resumed from step" in resumed.stdout, \
+        resumed.stdout + resumed.stderr[-4000:]
+    post = _losses(resumed.stdout)
+    assert post, resumed.stdout
+    assert min(post) >= 2  # restarted from a checkpoint, not from scratch
+    for t, h in post.items():
+        assert h == ref_losses[t], (t, h, ref_losses[t])
+    assert max(post) == steps - 1
+    # per-stage heartbeats carry the same Watchdog-parseable contract
+    for s in range(2):
+        hb = Watchdog(str(kill_dir / f"HEARTBEAT.stage{s}")).read()
+        assert hb is not None and hb[0] == steps - 1, (s, hb)
+
+
+def test_kill_resume_async_staleness_reset(tmp_path):
+    """Async-precond variant: resume is NOT bitwise (the documented
+    staleness reset, DESIGN.md §12/§13) — instead the relaunch must
+    resume from a checkpoint, re-bootstrap the refresh plane via
+    discard_inflight, and finish with finite losses."""
+    import json
+    import math
+
+    steps = 4
+    d = tmp_path / "drill"
+    proc = subprocess.Popen(
+        _drill_cmd(d, steps, extra=("--async_precond",)),
+        env=_drill_env(), cwd="/root/repo", stdout=subprocess.PIPE,
+        stderr=subprocess.STDOUT, text=True)
+    _kill_after_checkpoint(d, proc)
+    resumed = subprocess.run(
+        _drill_cmd(d, steps, extra=("--async_precond",)),
+        env=_drill_env(), cwd="/root/repo", capture_output=True,
+        text=True, timeout=560)
+    assert "resumed from step" in resumed.stdout, \
+        resumed.stdout + resumed.stderr[-4000:]
+    post = _losses(resumed.stdout)
+    assert post and max(post) == steps - 1, resumed.stdout
+    assert all(math.isfinite(float.fromhex(h)) for h in post.values())
+    done = [line for line in resumed.stdout.splitlines()
+            if line.startswith("DRILL_DONE ")]
+    telemetry = json.loads(done[0][len("DRILL_DONE "):])
+    # the resumed service re-bootstrapped (never consumed stale pendings)
+    assert telemetry["bootstrap"] >= 1, telemetry
