@@ -376,10 +376,97 @@ def validate_pipeline_train(doc: dict, name: str):
     return errs
 
 
+LOWRANK_TOP = {
+    "benchmark": lambda x: x == "lowrank",
+    "backend": lambda x: isinstance(x, str) and x,
+    "rank": _pos_int,
+    "oversample": lambda x: isinstance(x, int) and x >= 0,
+    "notes": _str_list,
+    "results": lambda x: isinstance(x, list) and x,
+}
+
+LOWRANK_ROW = {
+    "m": _pos_int,
+    "n": _pos_int,
+    "aspect": _pos_int,
+    "l": _pos_int,
+    "rank": _pos_int,
+    "oversample": lambda x: isinstance(x, int) and x >= 0,
+    "power_iters": lambda x: isinstance(x, int) and x >= 0,
+    "iters": _pos_int,
+    "tol": lambda x: _is_num(x) and x > 0,
+    "ortho_err": _nonneg,
+    "topk_err": _nonneg,
+    "flops_lowrank": _pos_int,
+    "flops_cubic": _pos_int,
+    "flops_ratio": lambda x: _is_num(x) and x > 0,
+    "hbm_lowrank": _pos_int,
+    "hbm_cubic": _pos_int,
+    "ms_lowrank": _nonneg,
+    "ms_cubic": _nonneg,
+}
+
+
+def validate_lowrank(doc: dict, name: str):
+    errs = []
+    for field, ok in LOWRANK_TOP.items():
+        if field not in doc:
+            errs.append(f"{name}: missing top-level field {field!r}")
+        elif not ok(doc[field]):
+            errs.append(f"{name}: bad top-level {field}={doc[field]!r}")
+    rows = [r for r in (doc.get("results") or []) if isinstance(r, dict)]
+    for i, row in enumerate(doc.get("results") or []):
+        where = f"{name}: results[{i}]"
+        if not isinstance(row, dict):
+            errs.append(f"{where} is not an object")
+            continue
+        row_errs = []
+        for field, ok in LOWRANK_ROW.items():
+            if field not in row:
+                row_errs.append(f"{where}: missing field {field!r}")
+            elif not ok(row[field]):
+                row_errs.append(f"{where}: bad value "
+                                f"{field}={row[field]!r}")
+        errs.extend(row_errs)
+        if row_errs:
+            continue
+        # §14 accuracy contract: rangefinder orthonormality AND the
+        # dominant-subspace oracle error within the stated tol
+        for f in ("ortho_err", "topk_err"):
+            if row[f] > row["tol"]:
+                errs.append(f"{where}: {f}={row[f]} above tol "
+                            f"{row['tol']}")
+        # the subspace must be strict and the cell geometry consistent
+        if row["l"] != row["rank"] + row["oversample"]:
+            errs.append(f"{where}: l != rank + oversample")
+        if not row["l"] < min(row["m"], row["n"]):
+            errs.append(f"{where}: l must be a strict subspace of "
+                        f"min(m, n)")
+        if row["m"] != row["aspect"] * row["n"]:
+            errs.append(f"{where}: m != aspect * n")
+        # §14 cost contract: wherever the planner's size/aspect
+        # threshold fires (m >= 4n), the modeled FLOPs AND HBM traffic
+        # of the sketched path must STRICTLY beat the cubic polar
+        if row["m"] >= 4 * row["n"]:
+            if not row["flops_lowrank"] < row["flops_cubic"]:
+                errs.append(f"{where}: lowrank FLOPs must beat cubic at "
+                            f"m >= 4n ({row['flops_lowrank']} vs "
+                            f"{row['flops_cubic']})")
+            if not row["hbm_lowrank"] < row["hbm_cubic"]:
+                errs.append(f"{where}: lowrank HBM must beat cubic at "
+                            f"m >= 4n")
+    # the sweep must actually cover the claimed regime
+    if rows and not any(r.get("m", 0) >= 4 * r.get("n", 1)
+                        for r in rows):
+        errs.append(f"{name}: sweep has no m >= 4n cell")
+    return errs
+
+
 VALIDATORS = {
     "BENCH_batched_matfn.json": validate_batched_matfn,
     "BENCH_async_precond.json": validate_async_precond,
     "BENCH_pipeline_train.json": validate_pipeline_train,
+    "BENCH_lowrank.json": validate_lowrank,
 }
 
 

@@ -351,6 +351,24 @@ class OptimizerConfig:
     # before the polar iteration: Newton-Schulz runs with one small R-psum
     # instead of full cross-mesh GEMM collectives (§Perf iteration 3).
     muon_local_reshard: bool = False
+    # low-rank sketched orthogonalization tier (DESIGN.md §14): views too
+    # large or too rectangular for the cubic polar path (embedding,
+    # LM-head, MoE-expert tables) orthogonalize in a sketched top-k
+    # subspace at O(mnl) — a randomized rangefinder builds Q in R^{m x l}
+    # (l = lowrank_rank + lowrank_oversample), the existing fitted
+    # PRISM-NS polar runs on the projected [l, n] view, and the result
+    # lifts back through Q.  lowrank_rank=0 (default) disables the tier;
+    # with rank > 0 Muon additionally CLAIMS vocab/codebook leaves that
+    # otherwise fall through to the AdamW path (base.is_matrix_param).
+    lowrank_rank: int = 0
+    # planner thresholds (optim/bucketing.py::resolve_lowrank_tier): a
+    # bucket routes through the lowrank tier when its max view dim
+    # exceeds lowrank_max_dim OR its aspect ratio max/min reaches
+    # lowrank_aspect — and the modeled projected-chain FLOPs actually
+    # beat the cubic path (kernels/ops.py::lowrank_polar_flops).
+    lowrank_max_dim: int = 4096
+    lowrank_aspect: float = 4.0
+    lowrank_oversample: int = 8
 
     def __post_init__(self):
         if self.precond_async and self.precond_every <= 1:
@@ -369,6 +387,24 @@ class OptimizerConfig:
                 "precond_drift_slack needs matfn_tol: the drift trigger "
                 "threshold is matfn_tol * precond_drift_slack — the "
                 "certificate units of DESIGN.md §11/§12")
+        if self.lowrank_rank < 0:
+            raise ValueError(f"lowrank_rank must be >= 0 (0 disables the "
+                             f"§14 tier), got {self.lowrank_rank!r}")
+        if self.lowrank_oversample < 0:
+            raise ValueError(f"lowrank_oversample must be >= 0, got "
+                             f"{self.lowrank_oversample!r}")
+        if self.lowrank_max_dim < 1:
+            raise ValueError(f"lowrank_max_dim must be >= 1, got "
+                             f"{self.lowrank_max_dim!r}")
+        if self.lowrank_aspect < 1.0:
+            raise ValueError(f"lowrank_aspect must be >= 1.0, got "
+                             f"{self.lowrank_aspect!r}")
+        if self.lowrank_rank and self.matfn_method not in (
+                "prism", "newton_schulz"):
+            raise ValueError(
+                "lowrank_rank needs an NS-family matfn_method (prism | "
+                "newton_schulz): the §14 tier runs the fitted chains in "
+                f"the projected subspace, got {self.matfn_method!r}")
 
     @property
     def drift_threshold(self) -> Optional[float]:

@@ -158,8 +158,10 @@ def activation_rules(cfg: ModelConfig, mesh: Mesh,
             "expert_mlp": None if expert_ep else "model",
             "experts": "model" if expert_ep else None, "vocab": None,
             "kv_seq": "model",
-            # Muon local-reshard targets (iteration 3 of §Perf)
-            "opt_layers": "model", "opt_rows": "data",
+            # Muon local-reshard targets (iteration 3 of §Perf); the
+            # §14 sketch dim l of lowrank bases is never sharded (the
+            # subspace NS chain runs its Gram products on it)
+            "opt_layers": "model", "opt_rows": "data", "opt_basis": None,
         }
     return {
         "batch": batch_axes(mesh),
@@ -174,7 +176,7 @@ def activation_rules(cfg: ModelConfig, mesh: Mesh,
         "experts": "model" if expert_ep else None,
         "vocab": "model",
         "kv_seq": "model",
-        "opt_layers": "model", "opt_rows": "data",
+        "opt_layers": "model", "opt_rows": "data", "opt_basis": None,
     }
 
 
@@ -278,6 +280,31 @@ def precond_cache_sharding(mesh: Mesh, shape: Tuple[int, ...]):
     The spec is dtype-independent: bf16 cache storage
     (OptimizerConfig.precond_cache_dtype, DESIGN.md §9) halves the bytes
     under the SAME partitioning — the two savings compose.
+    """
+    entries: list = [None] * len(shape)
+    if len(shape) >= 3 and "model" in mesh.axis_names:
+        entries[0] = "model"
+    if len(shape) >= 2 and "data" in mesh.axis_names:
+        entries[-2] = "data"
+    return NamedSharding(mesh, constrain_spec(mesh, P(*entries), shape))
+
+
+def lowrank_basis_sharding(mesh: Mesh, shape: Tuple[int, ...]):
+    """Sharding for §14 rangefinder bases Q [..lead.., m, l] (and the
+    subspace factors B/P [..lead.., l, n] by symmetry of the rule).
+
+    batch spec: the scanned-layer lead dim goes over model — same layout
+    as precond_cache_sharding, so the lift Q @ polar(B) and the cache
+    scatter of its result stay collective-free along the lead dim.
+
+    basis spec: the long side m goes over data (each shard holds its
+    row-slice of the basis; the NS orthonormalization's [l, l] Gram
+    psums over data, l**2 words — negligible next to the O(m l) basis);
+    the sketch dim l is NEVER sharded — every Gram product, alpha fit
+    and residual certificate of the subspace chain contracts over it.
+
+    constrain_spec keeps any shape legal on any mesh (drops non-dividing
+    axes), mirroring the precond cache rule.
     """
     entries: list = [None] * len(shape)
     if len(shape) >= 3 and "model" in mesh.axis_names:

@@ -225,10 +225,19 @@ def clip_by_global_norm(grads, max_norm: float):
     return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
 
 
-def is_matrix_param(path_axes: tuple, shape: tuple) -> bool:
+def is_matrix_param(path_axes: tuple, shape: tuple,
+                    allow_embed: bool = False) -> bool:
     """Muon applies to hidden weight matrices: >=2D, both matrix dims
-    reasonably large, and not an embedding/vocab/codebook table."""
-    if any(a in ("vocab", "codebooks") for a in path_axes if a):
+    reasonably large, and not an embedding/vocab/codebook table.
+
+    ``allow_embed`` lifts the table exclusion: with the §14 lowrank tier
+    enabled (OptimizerConfig.lowrank_rank > 0) Muon claims vocab/codebook
+    leaves too — the bucketing planner then routes any view too large or
+    too rectangular for the cubic path through the sketched subspace
+    chains instead of letting it fall back to scaled AdamW.
+    """
+    if not allow_embed and any(a in ("vocab", "codebooks")
+                               for a in path_axes if a):
         return False
     dims = matrix_view_dims(path_axes, shape)
     if dims is None:

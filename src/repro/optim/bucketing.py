@@ -213,6 +213,60 @@ def resolve_fused_tier(pcfg: PrismConfig, bucket: Bucket,
     return dataclasses.replace(pcfg, fuse="on" if fits else "off")
 
 
+def resolve_lowrank_tier(cfg: OptimizerConfig,
+                         mshape: Tuple[int, int]) -> Optional[int]:
+    """Sketch width l when a bucket routes the §14 lowrank tier, None for
+    the cubic (§7/§10) tiers.
+
+    Like ``resolve_fused_tier`` this is a trace-time, batch-size-blind
+    choice from the bucket's static matrix shape.  The tier engages when
+    (a) it is enabled (``cfg.lowrank_rank > 0``) and the view's shape
+    crosses the size threshold — max dim above ``lowrank_max_dim`` or
+    aspect ratio at least ``lowrank_aspect`` — and (b) projection
+    actually wins: l = rank + oversample leaves a strict subspace
+    (l < min(m, n)) and the modeled projected-chain FLOPs beat the cubic
+    path (kernels/ops.py), so pathological knob choices degrade to the
+    exact tiers instead of a slower "acceleration".
+    """
+    if not cfg.lowrank_rank:
+        return None
+    if cfg.matfn_method not in ("prism", "newton_schulz"):
+        return None
+    m, n = int(mshape[-2]), int(mshape[-1])
+    hi, lo = max(m, n), min(m, n)
+    if hi <= cfg.lowrank_max_dim and hi < cfg.lowrank_aspect * lo:
+        return None
+    l = cfg.lowrank_rank + cfg.lowrank_oversample
+    if l >= lo:
+        return None
+    from repro.kernels import ops as kops
+
+    pcfg = cfg.resolved_prism
+    it = pcfg.iterations + pcfg.warm_alpha_iters
+    if kops.lowrank_polar_flops((hi, lo), l, iters=it,
+                                degree=pcfg.degree) >= \
+            kops.polar_flops((hi, lo), iters=it, degree=pcfg.degree):
+        return None
+    return l
+
+
+#: telemetry encoding of the per-bucket kernel tier (the int32 "tier"
+#: entry Muon carries per matrix leaf when the §14 tier is enabled)
+TIER_CODES = {"grid": 0, "fused": 1, "lowrank": 2}
+
+
+def resolve_tier(cfg: OptimizerConfig, mshape: Tuple[int, int]) -> str:
+    """Name of the kernel tier the planner picks for a view shape:
+    "lowrank" (§14) | "fused" (§10) | "grid" (§7).  Pure static-shape
+    logic — usable from tests/telemetry without building a Bucket."""
+    if resolve_lowrank_tier(cfg, mshape) is not None:
+        return "lowrank"
+    pcfg = resolve_fused_tier(
+        cfg.resolved_prism,
+        Bucket((int(mshape[-2]), int(mshape[-1])), (), 0))
+    return "fused" if pcfg.use_kernels and pcfg.fuse == "on" else "grid"
+
+
 # ------------------------------------------------------------------ sharding
 
 def mesh_batch_axes(cfg: Optional[OptimizerConfig]):
@@ -345,18 +399,38 @@ def polar_bucketed(views: Sequence[jax.Array], cfg: OptimizerConfig,
             stacked = sharding_ctx.shard_activation(
                 stacked, ("opt_layers", "opt_rows", None))
         kk = (jax.random.fold_in(key, bi) if key is not None else None)
-        n_real = (_gram_real_dims(b)
-                  if b.padded and method == "prism" else None)
-        pcfg_b = resolve_fused_tier(pcfg, b)
+        lowrank_l = resolve_lowrank_tier(cfg, b.shape)
+        if lowrank_l is not None:
+            # §14 lowrank tier: the projected chains live on the l side,
+            # which is never padded (plan_buckets pads the Gram side of
+            # the FULL view only, and zero pad rows/cols stay zero
+            # through the sketch -> project -> lift composition), so no
+            # n_real correction is threaded.  The §10 fuse choice
+            # resolves inside the inner polar calls from the SMALL
+            # [m, l] / [l, n] shapes (newton_schulz._fused_tier), not
+            # from the full bucket shape.
+            from repro.core import lowrank as lr
 
-        def run(x, *nr, _kk=kk, _pcfg=pcfg_b):
-            if method == "svd":
-                return matfn.polar(x, method="svd")
-            kw = {"n_real": nr[0]} if nr else {}
-            if with_iters:  # NS family only (asserted above)
-                kw["return_iters"] = True
-            return matfn.polar(x, method=method, cfg=_pcfg, key=_kk,
-                               **kw)
+            def run(x, _kk=kk, _l=lowrank_l):
+                return lr.polar_lowrank(
+                    x, cfg.lowrank_rank, cfg.lowrank_oversample,
+                    cfg=pcfg, key=_kk, method=method,
+                    return_iters=with_iters)
+
+            n_real = None
+        else:
+            n_real = (_gram_real_dims(b)
+                      if b.padded and method == "prism" else None)
+            pcfg_b = resolve_fused_tier(pcfg, b)
+
+            def run(x, *nr, _kk=kk, _pcfg=pcfg_b):
+                if method == "svd":
+                    return matfn.polar(x, method="svd")
+                kw = {"n_real": nr[0]} if nr else {}
+                if with_iters:  # NS family only (asserted above)
+                    kw["return_iters"] = True
+                return matfn.polar(x, method=method, cfg=_pcfg, key=_kk,
+                                   **kw)
 
         if mesh is not None and not local_reshard:
             gram_full = min(b.shape)  # pad slices carry no intra-slice pad

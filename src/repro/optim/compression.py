@@ -52,11 +52,11 @@ def int8_roundtrip(tree):
 def int8_psum(x: jax.Array, axis_name: str) -> jax.Array:
     """Quantize -> int32 psum -> dequantize, inside shard_map/pmap."""
     q, s, shape, pad = _quantize(x)
-    # sum int8 payloads in int32 (exact); scales reduce in fp32
-    qs = jax.lax.psum(q.astype(jnp.int32) * 1, axis_name)
-    # scales differ per shard: reconstruct per-shard contribution instead
-    # -> psum of dequantized blocks would lose the bandwidth win, so we
-    # psum (q * normalized scale) with a shared max-scale per block:
+    # scales differ per shard, and a psum of dequantized fp32 blocks
+    # would lose the bandwidth win — so every shard re-expresses its
+    # payload against the block's shared max scale (one fp32 pmax over
+    # the [-,1] scale column, 1/256 of the payload) and the int32 psum
+    # of the rescaled payloads is the ONLY full-size collective:
     smax = jax.lax.pmax(s, axis_name)
     ratio = s / smax
     qr = jnp.round(q.astype(jnp.float32) * ratio).astype(jnp.int32)
@@ -64,5 +64,4 @@ def int8_psum(x: jax.Array, axis_name: str) -> jax.Array:
     out = (qsum.astype(jnp.float32) * smax).reshape(-1)
     if pad:
         out = out[:-pad]
-    del qs
     return out.reshape(shape).astype(x.dtype)

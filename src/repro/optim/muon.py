@@ -79,37 +79,52 @@ def make_muon(cfg: OptimizerConfig, axes_tree) -> base.Optimizer:
     # benchmarks and tests, refreshed whenever the polar chains run and
     # carried through stale (cached) steps untouched.
     telemetry = cfg.matfn_telemetry
+    # §14: with the lowrank tier enabled Muon claims embedding/LM-head/
+    # codebook leaves too (base.is_matrix_param), and every matrix leaf
+    # carries a static "tier" telemetry scalar naming the kernel tier
+    # the bucketing planner resolves for its view shape.
+    allow_embed = cfg.lowrank_rank > 0
 
     def init(params):
         flat_p, flat_a, treedef = _flatten_with_axes(params, axes_tree)
         state = []
         for p, a in zip(flat_p, flat_a):
             mom = jnp.zeros(p.shape, jnp.float32)
-            if base.is_matrix_param(a, p.shape):
+            if base.is_matrix_param(a, p.shape, allow_embed):
                 s = {"mom": mom}
-                if telemetry or cfg.precond_every > 1:
-                    # view shape needed only for the telemetry/cache
-                    # entries; skip the throwaway zeros view otherwise
-                    M, _ = base.to_matrix_view(
-                        jnp.zeros(p.shape, jnp.float32), a)
+                # only the view SHAPE is needed for the telemetry/cache
+                # entries: eval_shape runs the view reshape abstractly,
+                # so init of an embedding-bearing tree never
+                # materializes a throwaway full-size zeros view
+                vshape = jax.eval_shape(
+                    lambda x, _a=a: base.to_matrix_view(x, _a)[0],
+                    jax.ShapeDtypeStruct(p.shape, jnp.float32)).shape
                 if telemetry:
-                    s["iters"] = jnp.zeros(M.shape[:-2], jnp.int32)
+                    s["iters"] = jnp.zeros(vshape[:-2], jnp.int32)
+                if allow_embed:
+                    s["tier"] = jnp.full(
+                        (), bucketing.TIER_CODES[bucketing.resolve_tier(
+                            cfg, vshape[-2:])], jnp.int32)
                 if cfg.precond_every > 1:
                     # staleness cache: the orthogonalized momentum VIEW
                     # (possibly transposed/flattened vs the param layout);
                     # stored in cfg.cache_dtype — bf16 halves cached
-                    # optimizer state, sharding rules unchanged (§9)
-                    s["ortho"] = jnp.zeros(M.shape,
+                    # optimizer state, sharding rules unchanged (§9).
+                    # Under §14 this is the LIFTED full-size view, so the
+                    # §12 double buffer and the precond-cache sharding
+                    # rules apply to the lowrank tier without special
+                    # cases.
+                    s["ortho"] = jnp.zeros(vshape,
                                            jnp.dtype(cfg.cache_dtype))
                 if cfg.precond_async:
                     # §12 double buffer: pending twin (sharded like the
                     # active cache) + the drift-proxy scalars
-                    s["ortho_p"] = jnp.zeros(M.shape,
+                    s["ortho_p"] = jnp.zeros(vshape,
                                              jnp.dtype(cfg.cache_dtype))
                     s["dnorm"] = jnp.zeros((), jnp.float32)
                     s["rnorm"] = jnp.zeros((), jnp.float32)
                     if telemetry:
-                        s["iters_p"] = jnp.zeros(M.shape[:-2], jnp.int32)
+                        s["iters_p"] = jnp.zeros(vshape[:-2], jnp.int32)
                 state.append(s)
             else:
                 state.append({"mom": mom,
@@ -163,7 +178,7 @@ def make_muon(cfg: OptimizerConfig, axes_tree) -> base.Optimizer:
         for i, (g, a, p, s) in enumerate(zip(flat_g, flat_a, flat_p,
                                              flat_s)):
             g = g.astype(jnp.float32)
-            if base.is_matrix_param(a, p.shape):
+            if base.is_matrix_param(a, p.shape, allow_embed):
                 mom = cfg.momentum * s["mom"] + g
                 gm = g + cfg.momentum * mom  # nesterov
                 M, meta = base.to_matrix_view(gm, a)
@@ -171,6 +186,8 @@ def make_muon(cfg: OptimizerConfig, axes_tree) -> base.Optimizer:
                 metas.append(meta)
                 leaf_idx.append(i)
                 new_s[i] = {"mom": mom}
+                if allow_embed:
+                    new_s[i]["tier"] = s["tier"]
                 if cfg.precond_every > 1:
                     new_s[i]["ortho"] = s["ortho"]
                 if cfg.precond_async:

@@ -1,7 +1,21 @@
-"""Serving steps: prefill (last-token logits) + single-token decode."""
+"""Serving steps: prefill (last-token logits) + single-token decode.
+
+Two decode policies share one step shape:
+
+  greedy=True   serve_step(params, cache, tokens, pos)
+                -> (logits, argmax token, cache); fully deterministic,
+                the launch/serve.py and examples/serve_lm.py loop.
+  greedy=False  serve_step(params, cache, tokens, pos, key)
+                -> (logits, sampled token, cache); temperature / top-k
+                sampling, the caller threads a PRNG key per step
+                (fold_in on the position keeps replays reproducible).
+
+``top_k=1`` degenerates to greedy regardless of temperature, so the
+sampled path can be regression-tested against the greedy one.
+"""
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -16,13 +30,54 @@ def make_prefill_step(model: Model) -> Callable:
     return prefill_step
 
 
-def make_serve_step(model: Model, greedy: bool = True) -> Callable:
-    def serve_step(params, cache, tokens, pos):
-        logits, cache = model.decode_step(params, cache, tokens, pos)
-        if greedy:
+def sample_logits(logits: jax.Array, key: jax.Array,
+                  temperature: float = 1.0,
+                  top_k: Optional[int] = None) -> jax.Array:
+    """Temperature / top-k sample over the trailing vocab axis.
+
+    Works for any leading batch layout (LM [B, V], audio [B, C, 1, V]):
+    returns int32 token ids shaped ``logits.shape[:-1]``.  ``top_k``
+    restricts the support to the k largest logits (None = full vocab);
+    ``temperature`` scales AFTER the restriction so top_k=1 is exact
+    argmax for any temperature.
+    """
+    if temperature <= 0.0:
+        raise ValueError(f"temperature must be > 0, got {temperature} "
+                         "(use greedy=True for argmax decoding)")
+    vocab = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    if top_k is not None and top_k < vocab:
+        vals, idx = jax.lax.top_k(logits, top_k)
+        choice = jax.random.categorical(key, vals / temperature, axis=-1)
+        nxt = jnp.take_along_axis(idx, choice[..., None], axis=-1)
+        return nxt[..., 0].astype(jnp.int32)
+    return jax.random.categorical(
+        key, logits / temperature, axis=-1).astype(jnp.int32)
+
+
+def make_serve_step(model: Model, greedy: bool = True,
+                    temperature: float = 1.0,
+                    top_k: Optional[int] = None) -> Callable:
+    if greedy:
+        def serve_step(params, cache, tokens, pos):
+            logits, cache = model.decode_step(params, cache, tokens, pos)
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        else:
-            nxt = None
+            return logits, nxt, cache
+
+        return serve_step
+
+    if temperature <= 0.0:
+        raise ValueError(f"temperature must be > 0, got {temperature} "
+                         "(use greedy=True for argmax decoding)")
+
+    def serve_step(params, cache, tokens, pos, key):
+        logits, cache = model.decode_step(params, cache, tokens, pos)
+        # fold the step position (a scalar per serve step; pos arrives
+        # [B, 1]) into the key: re-running a step — or replaying a
+        # trace — at the same pos resamples identically
+        nxt = sample_logits(
+            logits, jax.random.fold_in(key, jnp.reshape(pos, (-1,))[0]),
+            temperature=temperature, top_k=top_k)
         return logits, nxt, cache
 
     return serve_step

@@ -68,6 +68,45 @@ def test_decode_step(key, arch):
     assert bool(jnp.all(jnp.isfinite(logits)))
 
 
+@pytest.mark.parametrize("arch", ["qwen3-14b", "musicgen-medium"])
+def test_sampled_decode_step(key, arch):
+    """Sampled serving path: temperature/top-k tokens are int32, in
+    vocab, PRNG-reproducible, and top_k=1 degenerates to greedy."""
+    from repro.serving.decode import make_serve_step
+
+    cfg = get_smoke_config(arch)
+    model = build(cfg)
+    params = model.init(key)
+    step = jax.jit(make_serve_step(model, greedy=False, temperature=0.8,
+                                   top_k=16))
+    greedy_step = jax.jit(make_serve_step(model, greedy=True))
+    cache = model.init_cache(B, 64)
+    skey = jax.random.fold_in(key, 99)
+    nxt = None
+    for t in range(3):
+        inp = make_decode_inputs(jax.random.fold_in(key, t), cfg, B, t)
+        tok = inp["tokens"] if nxt is None else \
+            nxt.reshape(inp["tokens"].shape)
+        logits, nxt, cache = step(params, cache, tok, inp["pos"], skey)
+        assert nxt.dtype == jnp.int32
+        assert nxt.shape == logits.shape[:-1]
+        assert bool(jnp.all((nxt >= 0) & (nxt < cfg.vocab_size)))
+    # reproducible: same key + same inputs -> same sample
+    _, nxt2, _ = step(params, cache, tok, inp["pos"], skey)
+    np.testing.assert_array_equal(np.asarray(nxt), np.asarray(nxt2))
+    # top_k=1 == argmax for any temperature
+    one = jax.jit(make_serve_step(model, greedy=False, temperature=3.0,
+                                  top_k=1))
+    cache_a = model.init_cache(B, 64)
+    cache_b = model.init_cache(B, 64)
+    inp = make_decode_inputs(key, cfg, B, 0)
+    _, n_a, _ = one(params, cache_a, inp["tokens"], inp["pos"], skey)
+    _, n_g, _ = greedy_step(params, cache_b, inp["tokens"], inp["pos"])
+    np.testing.assert_array_equal(np.asarray(n_a), np.asarray(n_g))
+    with pytest.raises(ValueError):
+        make_serve_step(model, greedy=False, temperature=0.0)
+
+
 @pytest.mark.parametrize("arch", ["qwen3-14b", "mixtral-8x7b",
                                   "recurrentgemma-2b", "falcon-mamba-7b"])
 def test_decode_matches_forward(key, arch):

@@ -182,6 +182,90 @@ def test_sharded_parity_8dev():
         out.stdout[-2000:] + out.stderr[-3000:]
 
 
+INT8_PSUM_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, "src")
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.launch.mesh import compat_make_mesh
+    from repro.optim import compression
+    from repro.sharding_ctx import compat_shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = compat_make_mesh((8,), ("data",))
+    key = jax.random.PRNGKey(3)
+    # per-shard distinct magnitudes: exercises the shared-max-scale
+    # renormalization (ratio < 1 on 7 of 8 shards), odd length 1000
+    # exercises the block pad
+    x = jax.random.normal(key, (8, 1000)) * \\
+        (10.0 ** jnp.arange(8)[:, None] / 1e3)
+
+    def quantized(xs):
+        return compression.int8_psum(xs, "data")
+
+    def exact(xs):
+        return jax.lax.psum(xs, "data")
+
+    run_q, run_f = [compat_shard_map(
+        f, mesh=mesh, in_specs=(P("data", None),),
+        out_specs=P("data", None))(x)
+        for f in (quantized, exact)]
+    # every shard returns the same reduced vector; quantization error is
+    # bounded by half an int8 step of the LARGEST shard's block scale,
+    # times the 8 contributions
+    ref = np.asarray(run_f[0])
+    step = np.abs(np.asarray(x)).max() / 127.0
+    assert np.abs(np.asarray(run_q[0]) - ref).max() <= 8 * step, \\
+        (np.abs(np.asarray(run_q[0]) - ref).max(), step)
+
+    # collective census: the fixed int8_psum moves exactly ONE full-size
+    # int32 psum (the payload) and ONE fp32 pmax (the [-,1] scale
+    # column) — the dead second all-reduce stays dead
+    def collectives(jaxpr, out):
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name in ("psum", "pmax", "pmin", "ppermute",
+                                      "all_reduce", "psum2"):
+                out.append((eqn.primitive.name,
+                            eqn.invars[0].aval.dtype.name))
+            for v in eqn.params.values():
+                for j in (v if isinstance(v, (list, tuple)) else [v]):
+                    if hasattr(j, "jaxpr"):      # ClosedJaxpr
+                        collectives(j.jaxpr, out)
+                    elif hasattr(j, "eqns"):     # raw Jaxpr
+                        collectives(j, out)
+        return out
+
+    jaxpr = jax.make_jaxpr(compat_shard_map(
+        quantized, mesh=mesh, in_specs=(P("data", None),),
+        out_specs=P("data", None)))(x)
+    seen = collectives(jaxpr.jaxpr, [])
+    psums = [d for (n, d) in seen if n.startswith("psum")]
+    pmaxs = [d for (n, d) in seen if n == "pmax"]
+    assert psums == ["int32"], seen
+    assert pmaxs == ["float32"], seen
+    print("INT8_PSUM_OK")
+""")
+
+
+def test_int8_psum_parity_and_collective_census_8dev():
+    """int8_psum on an 8-device mesh: matches the fp32 psum within
+    quantization error, and its jaxpr contains exactly one int32 psum
+    plus one fp32 pmax (regression for the dead duplicate all-reduce)."""
+    env = dict(os.environ)
+    env.pop("JAX_PLATFORMS", None)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run([sys.executable, "-c", INT8_PSUM_SCRIPT],
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))),
+                         env=env, capture_output=True, text=True,
+                         timeout=900)
+    assert "INT8_PSUM_OK" in out.stdout, \
+        out.stdout[-2000:] + out.stderr[-3000:]
+
+
 # ------------------------------------------------------------- staleness
 
 
