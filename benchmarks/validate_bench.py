@@ -462,11 +462,122 @@ def validate_lowrank(doc: dict, name: str):
     return errs
 
 
+ROBUSTNESS_TOP = {
+    "benchmark": lambda x: x == "robustness",
+    "backend": lambda x: isinstance(x, str) and x,
+    "period": _pos_int,
+    "notes": _str_list,
+    "results": lambda x: isinstance(x, list) and x,
+    "recovery": lambda x: isinstance(x, dict),
+}
+
+ROBUSTNESS_ROW = {
+    "n": _pos_int,
+    "layers": _pos_int,
+    "period": _pos_int,
+    "steady_ms_bare": _nonneg,
+    "steady_ms_guarded": _nonneg,
+    "overhead_pct": _is_num,
+    # the committed baseline must carry the §15 launch contract:
+    # regenerating under REPRO_KERNEL_MODE=ref skips launch counting and
+    # is rejected here — rerun without it
+    "steady_matfn_launches_bare": lambda x: isinstance(x, int)
+    and not isinstance(x, bool),
+    "steady_matfn_launches_guarded": lambda x: isinstance(x, int)
+    and not isinstance(x, bool),
+    "matfn_launches_plain": _pos_int,
+    "matfn_launches_status": _pos_int,
+}
+
+ROBUSTNESS_RECOVERY = {
+    "steps": _pos_int,
+    "injected": _pos_int,
+    "bad_steps": lambda x: isinstance(x, int) and not isinstance(x, bool)
+    and x >= 0,
+    "final_finite": lambda x: isinstance(x, bool),
+    "discarded": lambda x: isinstance(x, int) and not isinstance(x, bool)
+    and x >= 0,
+    "retries": lambda x: isinstance(x, int) and not isinstance(x, bool)
+    and x >= 0,
+    "degraded": lambda x: isinstance(x, int) and not isinstance(x, bool)
+    and x >= 0,
+    "recovered_install": lambda x: isinstance(x, bool),
+}
+
+
+def validate_robustness(doc: dict, name: str):
+    errs = []
+    for field, ok in ROBUSTNESS_TOP.items():
+        if field not in doc:
+            errs.append(f"{name}: missing top-level field {field!r}")
+        elif not ok(doc[field]):
+            errs.append(f"{name}: bad top-level {field}={doc[field]!r}")
+    for i, row in enumerate(doc.get("results") or []):
+        where = f"{name}: results[{i}]"
+        if not isinstance(row, dict):
+            errs.append(f"{where} is not an object")
+            continue
+        row_errs = []
+        for field, ok in ROBUSTNESS_ROW.items():
+            if field not in row:
+                row_errs.append(f"{where}: missing field {field!r}")
+            elif not ok(row[field]):
+                row_errs.append(f"{where}: bad value "
+                                f"{field}={row[field]!r}")
+        errs.extend(row_errs)
+        if row_errs:
+            continue
+        # §15 launch contracts.  The guards are selects riding existing
+        # chains: the skip-step wrapper must keep the async steady step
+        # at the §12 contract's ZERO matfn launches, and the divergence
+        # detector's status read must add zero launches to the matfn
+        # plan (it is decoded from the certificate the loop computes).
+        for f in ("steady_matfn_launches_bare",
+                  "steady_matfn_launches_guarded"):
+            if row[f] != 0:
+                errs.append(f"{where}: {f}={row[f]} — the steady step "
+                            f"must stay at zero matfn launches")
+        if row["matfn_launches_status"] != row["matfn_launches_plain"]:
+            errs.append(f"{where}: status telemetry changed the launch "
+                        f"count ({row['matfn_launches_status']} vs "
+                        f"{row['matfn_launches_plain']})")
+    rec = doc.get("recovery")
+    if isinstance(rec, dict):
+        where = f"{name}: recovery"
+        rec_errs = []
+        for field, ok in ROBUSTNESS_RECOVERY.items():
+            if field not in rec:
+                rec_errs.append(f"{where}: missing field {field!r}")
+            elif not ok(rec[field]):
+                rec_errs.append(f"{where}: bad value "
+                                f"{field}={rec[field]!r}")
+        errs.extend(rec_errs)
+        if not rec_errs:
+            # exact accounting: every injected NaN burst is one skipped
+            # step — no false positives, none missed — and the run ends
+            # finite; the poisoned refresh stream must walk the full
+            # discard -> retry -> degrade ladder and then recover
+            if rec["bad_steps"] != rec["injected"]:
+                errs.append(f"{where}: bad_steps={rec['bad_steps']} != "
+                            f"injected={rec['injected']}")
+            if not rec["final_finite"]:
+                errs.append(f"{where}: run ended non-finite")
+            if not rec["discarded"] >= 1:
+                errs.append(f"{where}: poisoned refresh was never "
+                            f"discarded")
+            if not rec["degraded"] >= 1:
+                errs.append(f"{where}: retry ladder never degraded")
+            if not rec["recovered_install"]:
+                errs.append(f"{where}: no clean install after recovery")
+    return errs
+
+
 VALIDATORS = {
     "BENCH_batched_matfn.json": validate_batched_matfn,
     "BENCH_async_precond.json": validate_async_precond,
     "BENCH_pipeline_train.json": validate_pipeline_train,
     "BENCH_lowrank.json": validate_lowrank,
+    "BENCH_robustness.json": validate_robustness,
 }
 
 

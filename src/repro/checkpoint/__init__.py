@@ -1,3 +1,4 @@
-from repro.checkpoint.checkpoint import latest_step, restore, save
+from repro.checkpoint.checkpoint import (latest_step, restore, save,
+                                         verify_step)
 
-__all__ = ["latest_step", "restore", "save"]
+__all__ = ["latest_step", "restore", "save", "verify_step"]

@@ -1,10 +1,19 @@
 """Checkpointing: atomic, async-capable, elastic-reshard on restore.
 
 Format: one directory per step, ``step_{n:08d}/``, containing
-``tree.npz`` (flattened leaves keyed by path) + ``META`` (done marker).
-Writes go to a temp dir and are renamed into place (atomic on POSIX), so a
-crash mid-write never corrupts the latest checkpoint — the restart path
-simply resumes from the newest *complete* step.
+``tree.npz`` (flattened leaves keyed by path) + ``MANIFEST`` (per-leaf
+crc32 integrity record, json) + ``META`` (done marker).  Writes go to a
+temp dir and are renamed into place (atomic on POSIX), so a crash
+mid-write never corrupts the latest checkpoint — the restart path simply
+resumes from the newest *complete* step.
+
+Integrity (DESIGN.md §15): the MANIFEST records a zlib.crc32 per leaf,
+written INSIDE the same atomic rename as the payload, so checksum and
+data can never be torn apart by a crash.  ``_complete_steps`` requires
+it (a step without a manifest is not a checkpoint), and ``restore``
+verifies every leaf it loads — on mismatch (bit rot, a truncated or
+bit-flipped npz that still unpickles) it falls back to the newest step
+that DOES verify instead of resurrecting poisoned state.
 
 ``restore`` re-shards every leaf onto the *current* mesh via device_put
 with the target sharding: restarting on a different device count (elastic
@@ -12,15 +21,21 @@ scaling) works as long as the logical shapes still divide the new mesh.
 """
 from __future__ import annotations
 
+import json
 import os
 import shutil
 import threading
+import zlib
 from typing import Any, Optional
 
 import jax
 import numpy as np
 
 _SEP = "|"
+
+
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
 
 
 def _flatten(tree):
@@ -57,6 +72,13 @@ def save(ckpt_dir: str, step: int, tree: Any, keep: int = 3,
             shutil.rmtree(tmp)
         os.makedirs(tmp)
         np.savez(os.path.join(tmp, "tree.npz"), **arrays)
+        # per-leaf integrity manifest, inside the same atomic rename as
+        # the payload (§15): checksum and data commit together or not
+        # at all
+        manifest = {"step": step,
+                    "crc32": {k: _crc(v) for k, v in arrays.items()}}
+        with open(os.path.join(tmp, "MANIFEST"), "w") as f:
+            json.dump(manifest, f)
         with open(os.path.join(tmp, "META"), "w") as f:
             f.write(str(step))
         if os.path.exists(final):
@@ -73,15 +95,36 @@ def save(ckpt_dir: str, step: int, tree: Any, keep: int = 3,
 
 
 def _complete_steps(ckpt_dir: str):
+    """Steps with a committed (renamed-into-place) directory carrying
+    both the done marker AND the integrity manifest — a step without a
+    MANIFEST is not a checkpoint (§15)."""
     if not os.path.isdir(ckpt_dir):
         return []
     steps = []
     for d in os.listdir(ckpt_dir):
         full = os.path.join(ckpt_dir, d)
         if d.startswith("step_") and not d.endswith(".tmp") \
-                and os.path.exists(os.path.join(full, "META")):
+                and os.path.exists(os.path.join(full, "META")) \
+                and os.path.exists(os.path.join(full, "MANIFEST")):
             steps.append(int(d[len("step_"):]))
     return sorted(steps)
+
+
+def verify_step(ckpt_dir: str, step: int) -> bool:
+    """True iff ``step``'s payload matches its manifest bit-for-bit:
+    same leaf set, every crc32 equal.  Any read/parse error counts as
+    corrupt, never raises."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    try:
+        with open(os.path.join(d, "MANIFEST")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(d, "tree.npz"))
+        crcs = manifest["crc32"]
+        if set(crcs) != set(data.files):
+            return False
+        return all(_crc(data[k]) == crcs[k] for k in data.files)
+    except Exception:
+        return False
 
 
 def _gc(ckpt_dir: str, keep: int):
@@ -103,10 +146,25 @@ def restore(ckpt_dir: str, target: Any, step: Optional[int] = None,
     elastic re-shard; None keeps default placement.  ``allow_missing``:
     key names that may legitimately be absent from the file (saved with
     ``drop=``) — the target's own leaf is kept for those instead of
-    raising."""
-    step = latest_step(ckpt_dir) if step is None else step
+    raising.
+
+    Integrity (§15): the chosen step is crc-verified against its
+    MANIFEST before any leaf is consumed.  With ``step=None`` a corrupt
+    newest step falls back to the newest step that DOES verify (bit rot
+    costs at most one checkpoint interval, not the run); an explicitly
+    requested corrupt step raises — the caller asked for that exact
+    state and must not silently get another."""
     if step is None:
-        raise FileNotFoundError(f"no complete checkpoint in {ckpt_dir}")
+        valid = [s for s in reversed(_complete_steps(ckpt_dir))
+                 if verify_step(ckpt_dir, s)]
+        if not valid:
+            raise FileNotFoundError(
+                f"no complete, uncorrupted checkpoint in {ckpt_dir}")
+        step = valid[0]
+    elif not verify_step(ckpt_dir, step):
+        raise ValueError(
+            f"checkpoint step {step} in {ckpt_dir} fails crc32 "
+            f"verification against its MANIFEST (corrupt or torn write)")
     path = os.path.join(ckpt_dir, f"step_{step:08d}", "tree.npz")
     data = np.load(path)
     allow_missing = frozenset(allow_missing)

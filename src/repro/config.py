@@ -114,6 +114,19 @@ class PrismConfig:
         slightly above tol (sketch_dim=0 makes est_r exact).  Warm
         iterations and classical (fit-free) chains never consult tol —
         they have no trace chain to read — and run their static schedule.
+      divergence_factor: the §15 divergence detector riding the same
+        certificate.  Inside the adaptive loop every slice tracks its
+        best (smallest) est_r so far; the step est_r goes non-finite or
+        exceeds ``divergence_factor ×`` that best, the slice is
+        QUARANTINED — rolled back to its best-so-far iterate
+        (bitwise, like the freeze masks) and withdrawn from further
+        updates, with an int8 status code surfacing the event.  Only
+        consulted when ``tol`` is set (the detector reads the same free
+        trace-chain certificate); must be > 1.  Larger values tolerate
+        more transient certificate noise before declaring divergence —
+        with sketch_dim = p the certificate's relative std is
+        ~sqrt(2/p), so factors below ~2 would quarantine healthy chains
+        on sketch variance alone.
     """
 
     degree: int = 2
@@ -126,6 +139,7 @@ class PrismConfig:
     fuse: str = "auto"
     vmem_budget: int = 0
     tol: Optional[float] = None
+    divergence_factor: float = 10.0
 
     def __post_init__(self):
         if self.fuse not in ("auto", "on", "off"):
@@ -134,6 +148,11 @@ class PrismConfig:
         if self.tol is not None and not self.tol > 0.0:
             raise ValueError(f"PrismConfig.tol must be positive or None, "
                              f"got {self.tol!r}")
+        if not self.divergence_factor > 1.0:
+            raise ValueError(f"PrismConfig.divergence_factor must be > 1 "
+                             f"(the §15 detector compares est_r against "
+                             f"factor x best-so-far), got "
+                             f"{self.divergence_factor!r}")
 
     @property
     def bounds(self) -> Tuple[float, float]:
@@ -369,6 +388,22 @@ class OptimizerConfig:
     lowrank_max_dim: int = 4096
     lowrank_aspect: float = 4.0
     lowrank_oversample: int = 8
+    # numerics guardian (DESIGN.md §15): skip-step protection.  When on,
+    # the optimizer update still computes unconditionally, but ONE fused
+    # finiteness check over grads + proposed state gates the state write
+    # under a single lax.cond — a non-finite step leaves params/momentum
+    # bitwise untouched and bumps the ``bad_steps`` counter carried in
+    # the optimizer state.  Adds zero matfn launches (the check is a
+    # scalar reduction fused into the step program); off by default so
+    # existing state trees stay bit-identical.
+    skip_nonfinite: bool = False
+    # async refresh validation (DESIGN.md §15): consecutive validation
+    # failures a pending-buffer slot may accumulate — each failure
+    # discards the poisoned pending twin (never swapped) and re-dispatches
+    # with capped exponential backoff — before the service stops retrying
+    # and DEGRADES the slot to its last good active buffer until the next
+    # clock-period refresh.
+    precond_max_retries: int = 3
 
     def __post_init__(self):
         if self.precond_async and self.precond_every <= 1:
@@ -399,6 +434,9 @@ class OptimizerConfig:
         if self.lowrank_aspect < 1.0:
             raise ValueError(f"lowrank_aspect must be >= 1.0, got "
                              f"{self.lowrank_aspect!r}")
+        if self.precond_max_retries < 0:
+            raise ValueError(f"precond_max_retries must be >= 0, got "
+                             f"{self.precond_max_retries!r}")
         if self.lowrank_rank and self.matfn_method not in (
                 "prism", "newton_schulz"):
             raise ValueError(

@@ -16,14 +16,15 @@ import jax.numpy as jnp
 
 from repro.core import polynomials as poly
 from repro.core import prism
-from repro.core.newton_schulz import IterInfo, _fro, _mm
+from repro.core.newton_schulz import IterInfo, _mm, _safe_fro
 
 
 def inv(A: jax.Array, iters: int = 20, method: str = "prism",
         sketch_dim: int = 8, key: Optional[jax.Array] = None,
         dtype=jnp.float32, alpha_bounds=(0.5, 2.0),
         return_info: bool = False, tol: Optional[float] = None,
-        return_iters: bool = False):
+        return_iters: bool = False, return_status: bool = False,
+        divergence_factor: float = 10.0):
     """A^{-1} for full-rank square A via (PRISM-)Chebyshev iteration.
 
     tol: adaptive early-stopping certificate (DESIGN.md §11): with
@@ -36,10 +37,16 @@ def inv(A: jax.Array, iters: int = 20, method: str = "prism",
       (as does ``return_info``, which must stack per-iteration values).
     return_iters: also return per-matrix ``iters_used`` (int32,
       shape ``A.shape[:-2]``).
+    return_status: also return the per-matrix int8 guardian status
+      (prism.STATUS_*, DESIGN.md §15); ``divergence_factor`` is the
+      detector threshold of the adaptive loop.  All-zeros on the
+      non-adaptive paths, which carry no certificate to read.
     """
     in_dtype = A.dtype
     n = A.shape[-1]
-    c = _fro(A).astype(dtype)
+    # zero-slice guard (§15): 0/0 normalization would poison X_0 before
+    # the certificate ever runs — clamp like the NS entry points do
+    c = _safe_fro(A).astype(dtype)
     Ah = A.astype(dtype) / c
     X = jnp.swapaxes(Ah, -1, -2)
     apoly = poly.chebyshev_residual()
@@ -67,11 +74,11 @@ def inv(A: jax.Array, iters: int = 20, method: str = "prism",
         return X_ + XR + ab * _mm(XR, R)
 
     if adaptive:
-        out_it, used = prism.adaptive_masked_loop(
+        out_it, used, status = prism.adaptive_masked_loop(
             {"X": X},
             lambda it, k: (lambda R: (R,) + fit(R, k))(residual(it["X"])),
             lambda it, R, a: {"X": step(it["X"], R, a)},
-            tol, 0, iters, batch)
+            tol, 0, iters, batch, divergence_factor=divergence_factor)
         X = out_it["X"]
     else:
         alphas, fros = [], []
@@ -86,10 +93,13 @@ def inv(A: jax.Array, iters: int = 20, method: str = "prism",
                 fros.append(_fro(R)[..., 0, 0])
             X = step(X, R, a)
         used = jnp.full(batch, iters, jnp.int32)
+        status = jnp.zeros(batch, jnp.int8)
     out = (X / c).astype(in_dtype)
     res = (out,)
     if return_info:
         res = res + (IterInfo(jnp.stack(alphas), jnp.stack(fros)),)
     if return_iters:
         res = res + (used,)
+    if return_status:
+        res = res + (status,)
     return res if len(res) > 1 else res[0]

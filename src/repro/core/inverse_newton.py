@@ -29,7 +29,8 @@ def inv_proot(A: jax.Array, p: int, iters: int = 20, method: str = "prism",
               sketch_dim: int = 8, key: Optional[jax.Array] = None,
               dtype=jnp.float32, alpha_bounds: Optional[Tuple[float, float]] = None,
               return_info: bool = False, tol: Optional[float] = None,
-              return_iters: bool = False):
+              return_iters: bool = False, return_status: bool = False,
+              divergence_factor: float = 10.0):
     """A^{-1/p} for SPD A via (PRISM-)coupled inverse Newton.
 
     tol: adaptive early-stopping certificate (DESIGN.md §11): with
@@ -40,11 +41,21 @@ def inv_proot(A: jax.Array, p: int, iters: int = 20, method: str = "prism",
       tol and runs the fixed count — it computes no sketched traces to
       certify from.
     return_iters: also return per-matrix ``iters_used`` (int32).
+    return_status: also return the per-matrix int8 guardian status
+      (prism.STATUS_*, DESIGN.md §15); ``divergence_factor`` is the
+      adaptive loop's detector threshold.  All-zeros on non-adaptive
+      paths.
     """
     in_dtype = A.dtype
     n = A.shape[-1]
     A32 = A.astype(dtype)
-    c = (2.0 * _fro(A32).astype(dtype) / (p + 1)) ** (1.0 / p)
+    # zero-slice guard (§15): for an all-zero slice the scale underflows
+    # (XLA CPU flushes the subnormal to 0) and X_0 = I/c would start the
+    # chain at inf, upstream of any certificate.  c = 1 instead keeps
+    # the iterates bounded; the slice then exits as MAXITER, never OK.
+    c_raw = (2.0 * _fro(A32).astype(dtype) / (p + 1)) ** (1.0 / p)
+    c = jnp.where(jnp.isfinite(c_raw) & (c_raw > 0), c_raw,
+                  jnp.ones_like(c_raw))
     X = jnp.broadcast_to(jnp.eye(n, dtype=dtype), A32.shape) / c
     M = A32 / c ** p
     lo, hi = alpha_bounds if alpha_bounds is not None else (1.0 / p, 2.0 / p)
@@ -77,8 +88,9 @@ def inv_proot(A: jax.Array, p: int, iters: int = 20, method: str = "prism",
             Xn, Mn = step(it["X"], it["M"], a)
             return {"X": Xn, "M": Mn}
 
-        out_it, used = prism.adaptive_masked_loop(
-            {"X": X, "M": M}, afit, astep, tol, 0, iters, batch)
+        out_it, used, status = prism.adaptive_masked_loop(
+            {"X": X, "M": M}, afit, astep, tol, 0, iters, batch,
+            divergence_factor=divergence_factor)
         X = out_it["X"]
     else:
         alphas, fros = [], []
@@ -93,6 +105,7 @@ def inv_proot(A: jax.Array, p: int, iters: int = 20, method: str = "prism",
                 fros.append(_fro(R)[..., 0, 0])
             X, M = step(X, M, a)
         used = jnp.full(batch, iters, jnp.int32)
+        status = jnp.zeros(batch, jnp.int8)
     # M_k = X_k^p A is invariant, so M_k -> I gives X_k -> A^{-1/p} directly;
     # the initial 1/c scaling needs no undoing.
     out = X.astype(in_dtype)
@@ -101,4 +114,6 @@ def inv_proot(A: jax.Array, p: int, iters: int = 20, method: str = "prism",
         res = res + (IterInfo(jnp.stack(alphas), jnp.stack(fros)),)
     if return_iters:
         res = res + (used,)
+    if return_status:
+        res = res + (status,)
     return res if len(res) > 1 else res[0]

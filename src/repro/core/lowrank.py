@@ -88,7 +88,8 @@ def rangefinder(M: jax.Array, l: int, key: jax.Array,
 def polar_lowrank(M: jax.Array, rank: int, oversample: int,
                   cfg: Optional[PrismConfig] = None,
                   key: Optional[jax.Array] = None, method: str = "prism",
-                  power_iters: int = 1, return_iters: bool = False):
+                  power_iters: int = 1, return_iters: bool = False,
+                  return_status: bool = False):
     """Rank-l orthogonalization O ~ U_l V_l^T of M [..., m, n] (§14).
 
     l = min(rank + oversample, min(m, n)).  Orientation-equivariant: a
@@ -112,13 +113,14 @@ def polar_lowrank(M: jax.Array, rank: int, oversample: int,
     B = _mm(jnp.swapaxes(Q, -1, -2), X, cfg.use_kernels)  # [..., l, n]
     P = matfn.polar(B, method=method, cfg=cfg,
                     key=jax.random.fold_in(key, 1),
-                    return_iters=return_iters)
-    if return_iters:
-        P, iters = P
+                    return_iters=return_iters,
+                    return_status=return_status)
+    if return_iters or return_status:
+        P, *aux = P
     O = _mm(Q, P, cfg.use_kernels)
     O = jnp.swapaxes(O, -1, -2) if transpose else O
-    if return_iters:
-        return O, iters
+    if return_iters or return_status:
+        return (O, *aux)
     return O
 
 

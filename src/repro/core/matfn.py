@@ -35,7 +35,11 @@ certifies.  Caveats, uniform across families:
   * classical (fit-free) methods compute no traces and therefore run
     their fixed schedule regardless of tol.
 Every NS-family entry point accepts ``return_iters=True`` to append the
-per-matrix realized iteration counts (int32, shape ``A.shape[:-2]``).
+per-matrix realized iteration counts (int32, shape ``A.shape[:-2]``),
+and ``return_status=True`` to append the per-matrix int8 guardian
+status (prism.STATUS_OK / STATUS_MAXITER / STATUS_QUARANTINED — the
+§15 divergence detector riding the same certificate; all-zeros for
+methods that certify nothing).
 
 Config aliasing: entry points default ``cfg=None`` and construct a fresh
 ``PrismConfig()`` per call — there is no module-level shared default
@@ -60,31 +64,42 @@ def _telemetry_shim(out, A, kw, method: str):
     """Uniform telemetry contract for methods without fitted iterations
     (LA oracles, fixed-schedule baselines): ``return_iters`` appends
     zeros — they certify nothing, matching optim/shampoo's convention —
-    and ``return_info`` (a per-iteration trajectory these methods never
-    produce) raises instead of silently returning garbage.  MUTATES kw
-    (pops the telemetry keys) so remaining kwargs can pass through."""
+    ``return_status`` appends int8 zeros (no certificate => no guardian
+    verdict, DESIGN.md §15), and ``return_info`` (a per-iteration
+    trajectory these methods never produce) raises instead of silently
+    returning garbage.  MUTATES kw (pops the telemetry keys) so
+    remaining kwargs can pass through."""
     if kw.pop("return_info", False):
         raise ValueError(f"return_info is not supported by "
                          f"method={method!r} (no iteration trajectory)")
-    if kw.pop("return_iters", False):
-        return out, jnp.zeros(A.shape[:-2], jnp.int32)
-    return out
+    ri = kw.pop("return_iters", False)
+    rs = kw.pop("return_status", False)
+    res = (out,)
+    if ri:
+        res = res + (jnp.zeros(A.shape[:-2], jnp.int32),)
+    if rs:
+        res = res + (jnp.zeros(A.shape[:-2], jnp.int8),)
+    return res if len(res) > 1 else out
 
 
 def _run_fixed_schedule(fn, A, kw):
     """Run a fixed-schedule (fit-free) iteration family that supports
-    ``return_info`` but not ``return_iters`` (polar_express, DB-newton):
-    pops return_iters and appends zero counts FLAT after the family's
-    (out[, info]) result, keeping the documented (out[, info][, iters])
-    shape."""
+    ``return_info`` but not ``return_iters``/``return_status``
+    (polar_express, DB-newton): pops those keys and appends zero counts
+    / zero statuses FLAT after the family's (out[, info]) result,
+    keeping the documented (out[, info][, iters][, status]) shape."""
     ri = kw.pop("return_iters", False)
+    rs = kw.pop("return_status", False)
     res = fn(**kw)
-    if not ri:
+    if not (ri or rs):
         return res
-    zeros = jnp.zeros(A.shape[:-2], jnp.int32)
-    if kw.get("return_info"):
-        return res + (zeros,)  # res is already (out, info)
-    return res, zeros
+    if not kw.get("return_info"):
+        res = (res,)
+    if ri:
+        res = res + (jnp.zeros(A.shape[:-2], jnp.int32),)
+    if rs:
+        res = res + (jnp.zeros(A.shape[:-2], jnp.int8),)
+    return res
 
 
 def polar(A: jax.Array, method: str = "prism",
@@ -150,7 +165,8 @@ def inv_sqrtm(A: jax.Array, method: str = "prism", **kw):
     if method == "inverse_newton":
         return _invnewton.inv_proot(A, p=2, **kw)
     res = sqrtm(A, method=method, **kw)
-    if kw.get("return_info") or kw.get("return_iters"):
+    if kw.get("return_info") or kw.get("return_iters") \
+            or kw.get("return_status"):
         return (res[0][1],) + tuple(res[1:])
     return res[1]
 

@@ -44,6 +44,7 @@ from typing import List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config import PrismConfig
 from repro.core import polynomials as poly
@@ -64,6 +65,20 @@ def _eye_like(M: jax.Array) -> jax.Array:
 def _fro(M: jax.Array) -> jax.Array:
     return jnp.sqrt(jnp.sum(jnp.square(M.astype(jnp.float32)),
                             axis=(-2, -1), keepdims=True))
+
+
+def _safe_fro(M: jax.Array) -> jax.Array:
+    """||M||_F clamped away from zero for the entry-point normalizations.
+
+    A zero slice (rank-collapsed momentum, freshly-padded bucket slot)
+    would otherwise normalize as 0/0 = NaN before the first iteration
+    ever runs — the one poisoning the §15 guardian cannot contain,
+    because it happens upstream of the certificate.  Clamping to the
+    smallest normal fp32 leaves every slice with ||M||_F >= tiny
+    bit-identical and turns zero slices into exact zero pass-throughs
+    (0 / tiny = 0), which the chains then fix at X = 0.
+    """
+    return jnp.maximum(_fro(M), jnp.float32(np.finfo(np.float32).tiny))
 
 
 def _mm(A, B, use_kernels=False, alpha=1.0, C=None, beta=0.0):
@@ -237,8 +252,13 @@ def _adaptive_fit_run(X, Y, cfg: PrismConfig, k0: int, count: int, key,
     through a masked identity update (``jnp.where`` on the untouched
     iterate — bitwise-stable) while stragglers keep iterating.  The loop
     exits when the SLOWEST slice certifies or the ``count`` budget runs
-    out.  Returns (X, Y, used) with ``used`` the per-slice number of
-    updates actually applied (shape ``X.shape[:-2]``, int32).
+    out.  The same certificate drives the §15 divergence detector
+    (``cfg.divergence_factor``): a slice whose est_r goes non-finite or
+    blows past its best-so-far is QUARANTINED — rolled back to the
+    best-certified iterate and withdrawn.  Returns (X, Y, used, status)
+    with ``used`` the per-slice number of updates actually applied
+    (shape ``X.shape[:-2]``, int32) and ``status`` the per-slice int8
+    guardian code (prism.STATUS_*).
 
     The §10 launch contracts survive unchanged: the loop body is the
     body of one fitted iteration — 2 launches on the fused tier, 2+d on
@@ -288,9 +308,10 @@ def _adaptive_fit_run(X, Y, cfg: PrismConfig, k0: int, count: int, key,
         return {"X": Xn, "Y": Yn} if coupled else {"X": Xn}
 
     iterates = {"X": X, "Y": Y} if coupled else {"X": X}
-    out, used = prism.adaptive_masked_loop(iterates, fit, step, cfg.tol,
-                                           k0, count, X.shape[:-2])
-    return out["X"], out.get("Y", Y), used
+    out, used, status = prism.adaptive_masked_loop(
+        iterates, fit, step, cfg.tol, k0, count, X.shape[:-2],
+        divergence_factor=cfg.divergence_factor)
+    return out["X"], out.get("Y", Y), used, status
 
 
 def _run_phases(X, cfg: PrismConfig, method: str, iters: int, key,
@@ -306,7 +327,9 @@ def _run_phases(X, cfg: PrismConfig, method: str, iters: int, key,
     engine, whose per-iteration quantities a dynamic loop cannot stack);
     ``iters_used`` is the per-matrix count of applied updates, shape
     ``X.shape[:-2]`` — the static total unless ``cfg.tol`` turns the fit
-    phases adaptive (§11).
+    phases adaptive (§11).  ``status`` is the per-matrix int8 guardian
+    code (prism.STATUS_*), the severity-maximum across all adaptive fit
+    runs (all-zeros on static chains, which carry no certificate).
     """
     coupled = Y is not None
     fused = _fused_tier(cfg, X.shape[-2:], return_info, coupled=coupled)
@@ -314,6 +337,7 @@ def _run_phases(X, cfg: PrismConfig, method: str, iters: int, key,
         from repro.kernels import ops as kops
     alphas, fros = [], []
     iters_used = jnp.zeros(X.shape[:-2], jnp.int32)
+    status = jnp.zeros(X.shape[:-2], jnp.int8)
     adaptive = cfg.tol is not None and not return_info
 
     def unpack(out):
@@ -339,10 +363,11 @@ def _run_phases(X, cfg: PrismConfig, method: str, iters: int, key,
             continue
         k0, count = payload
         if adaptive:
-            X, Y, used = _adaptive_fit_run(X, Y, cfg, k0, count, key,
-                                           n_real, family, residual_fn,
-                                           fused)
+            X, Y, used, st = _adaptive_fit_run(X, Y, cfg, k0, count, key,
+                                               n_real, family, residual_fn,
+                                               fused)
             iters_used = iters_used + used
+            status = jnp.maximum(status, st)
             continue
         for k in range(k0, k0 + count):
             iters_used = iters_used + 1
@@ -363,7 +388,7 @@ def _run_phases(X, cfg: PrismConfig, method: str, iters: int, key,
             if return_info:
                 alphas.append(a)
                 fros.append(_fro(R)[..., 0, 0])
-    return X, Y, alphas, fros, iters_used
+    return X, Y, alphas, fros, iters_used, status
 
 
 # ---------------------------------------------------------------------------
@@ -371,21 +396,28 @@ def _run_phases(X, cfg: PrismConfig, method: str, iters: int, key,
 # ---------------------------------------------------------------------------
 
 
-def _with_telemetry(out, info, iters_used, return_info, return_iters):
-    """(out[, IterInfo][, iters_used]) per the two telemetry flags."""
+def _with_telemetry(out, info, iters_used, return_info, return_iters,
+                    status=None, return_status=False):
+    """(out[, IterInfo][, iters_used][, status]) per the telemetry
+    flags — ``status`` is the per-matrix int8 guardian code
+    (prism.STATUS_*), appended last so existing unpackers are
+    untouched."""
     res = (out,)
     if return_info:
         alphas, fros = info
         res = res + (IterInfo(jnp.stack(alphas), jnp.stack(fros)),)
     if return_iters:
         res = res + (iters_used,)
+    if return_status:
+        res = res + (status,)
     return res if len(res) > 1 else res[0]
 
 
 def polar(A: jax.Array, cfg: Optional[PrismConfig] = None,
           method: str = "prism", iters: Optional[int] = None,
           key: Optional[jax.Array] = None, return_info: bool = False,
-          n_real: Optional[jax.Array] = None, return_iters: bool = False):
+          n_real: Optional[jax.Array] = None, return_iters: bool = False,
+          return_status: bool = False):
     """Polar factor U V^T of A [..., m, n] via (PRISM-)Newton-Schulz.
 
     method: "prism" | "newton_schulz" (classical Taylor alpha).
@@ -398,20 +430,23 @@ def polar(A: jax.Array, cfg: Optional[PrismConfig] = None,
       iterations actually applied, shape ``A.shape[:-2]`` (int32).  Equals
       ``iters`` unless ``cfg.tol`` enables adaptive early stopping
       (DESIGN.md §11), where converged slices freeze early.
+    return_status: also return the per-matrix int8 guardian status
+      (prism.STATUS_*, DESIGN.md §15) — appended after ``iters_used``.
+      All-zeros unless ``cfg.tol`` runs the adaptive certificate.
     """
     cfg = PrismConfig() if cfg is None else cfg
     iters = cfg.iterations if iters is None else iters
     transpose = A.shape[-2] < A.shape[-1]
     X = jnp.swapaxes(A, -1, -2) if transpose else A
     in_dtype = X.dtype
-    X = X.astype(cfg.dtype) / _fro(X).astype(cfg.dtype)
-    X, _, alphas, fros, used = _run_phases(
+    X = X.astype(cfg.dtype) / _safe_fro(X).astype(cfg.dtype)
+    X, _, alphas, fros, used, status = _run_phases(
         X, cfg, method, iters, key, return_info, "polar",
         lambda x, y: _gram_residual(x, cfg.use_kernels), n_real=n_real)
     X = jnp.swapaxes(X, -1, -2) if transpose else X
     X = X.astype(in_dtype)
     return _with_telemetry(X, (alphas, fros), used, return_info,
-                           return_iters)
+                           return_iters, status, return_status)
 
 
 # ---------------------------------------------------------------------------
@@ -432,28 +467,29 @@ def _coupled_residual(X, Y, use_kernels: bool):
 def sqrtm(A: jax.Array, cfg: Optional[PrismConfig] = None,
           method: str = "prism", iters: Optional[int] = None,
           key: Optional[jax.Array] = None, return_info: bool = False,
-          return_iters: bool = False):
+          return_iters: bool = False, return_status: bool = False):
     """(A^{1/2}, A^{-1/2}) for symmetric PSD A via coupled (PRISM-)NS.
 
     Normalizes by ||A||_F (so spectrum in (0, 1]) and rescales the outputs.
     ``return_iters`` appends the per-matrix ``iters_used`` telemetry (see
     ``polar``); with ``cfg.tol`` set, BOTH coupled iterates freeze
     together once the slice's certificate est_r ~ ||I - Y X||_F clears
-    tol (DESIGN.md §11).
+    tol (DESIGN.md §11).  ``return_status`` appends the per-matrix int8
+    guardian status (prism.STATUS_*, DESIGN.md §15).
     """
     cfg = PrismConfig() if cfg is None else cfg
     iters = cfg.iterations if iters is None else iters
     in_dtype = A.dtype
-    c = _fro(A).astype(cfg.dtype)
+    c = _safe_fro(A).astype(cfg.dtype)
     X = A.astype(cfg.dtype) / c
     Y = jnp.broadcast_to(_eye_like(X), X.shape)
-    X, Y, alphas, fros, used = _run_phases(
+    X, Y, alphas, fros, used, status = _run_phases(
         X, cfg, method, iters, key, return_info, "sqrt",
         lambda x, y: _coupled_residual(x, y, cfg.use_kernels), Y=Y)
     sqrt_c = jnp.sqrt(c)
     out = (X * sqrt_c).astype(in_dtype), (Y / sqrt_c).astype(in_dtype)
     return _with_telemetry(out, (alphas, fros), used, return_info,
-                           return_iters)
+                           return_iters, status, return_status)
 
 
 # ---------------------------------------------------------------------------
@@ -464,17 +500,17 @@ def sqrtm(A: jax.Array, cfg: Optional[PrismConfig] = None,
 def signm(A: jax.Array, cfg: Optional[PrismConfig] = None,
           method: str = "prism", iters: Optional[int] = None,
           key: Optional[jax.Array] = None, return_info: bool = False,
-          return_iters: bool = False):
+          return_iters: bool = False, return_status: bool = False):
     """sign(A) for A with A^2 symmetric and ||A||_2 <= 1 after ||.||_F
     scaling.  ``return_iters`` appends per-matrix ``iters_used`` (see
-    ``polar``)."""
+    ``polar``); ``return_status`` the int8 guardian status (§15)."""
     cfg = PrismConfig() if cfg is None else cfg
     iters = cfg.iterations if iters is None else iters
     in_dtype = A.dtype
-    X = A.astype(cfg.dtype) / _fro(A).astype(cfg.dtype)
-    X, _, alphas, fros, used = _run_phases(
+    X = A.astype(cfg.dtype) / _safe_fro(A).astype(cfg.dtype)
+    X, _, alphas, fros, used, status = _run_phases(
         X, cfg, method, iters, key, return_info, "sign",
         lambda x, y: _eye_like(x) - _mm(x, x, cfg.use_kernels))
     X = X.astype(in_dtype)
     return _with_telemetry(X, (alphas, fros), used, return_info,
-                           return_iters)
+                           return_iters, status, return_status)

@@ -154,8 +154,17 @@ def alpha_schedule_key(key: jax.Array, k: jax.Array) -> jax.Array:
     return jax.random.fold_in(key, k)
 
 
+# Per-slice guardian status codes (DESIGN.md §15), int8.  Ordered by
+# severity so multi-phase runs (and the optimizer's per-leaf telemetry)
+# aggregate with a plain ``maximum``.
+STATUS_OK = np.int8(0)           # certified: est_r <= tol before budget
+STATUS_MAXITER = np.int8(1)      # budget exhausted without certifying
+STATUS_QUARANTINED = np.int8(2)  # divergence detected; rolled back
+
+
 def adaptive_masked_loop(iterates, fit, step, tol: float, k0: int,
-                         budget: int, batch):
+                         budget: int, batch,
+                         divergence_factor: float = 10.0):
     """The §11 certify-then-freeze loop driver, shared by every adaptive
     iteration family (newton_schulz fit runs, chebyshev, inverse newton).
 
@@ -168,6 +177,16 @@ def adaptive_masked_loop(iterates, fit, step, tol: float, k0: int,
 
     exiting when every batch slice is certified or the budget runs out.
 
+    Divergence containment (DESIGN.md §15): the same free certificate
+    doubles as a divergence detector.  Each slice tracks its best
+    (smallest) est_r so far together with a snapshot of the iterates
+    that achieved it; the step est_r goes non-finite or exceeds
+    ``divergence_factor ×`` that best, the slice is QUARANTINED —
+    rolled back to the best-so-far snapshot (a ``jnp.where`` select,
+    bitwise like the freeze masks, zero extra launches) and withdrawn
+    from further updates.  Certification wins ties: a slice whose est_r
+    clears tol freezes as OK even if the detector would also fire.
+
     Args:
       iterates: dict of same-batch [..., n, n] iterate arrays (e.g.
         {"X": X} or the coupled {"X": X, "Y": Y} / {"X": X, "M": M}).
@@ -177,9 +196,12 @@ def adaptive_masked_loop(iterates, fit, step, tol: float, k0: int,
       step: (iterates, aux, alpha) -> dict of updated iterates.
       tol, k0, budget: certificate threshold and the static run bounds.
       batch: the shared leading batch shape of every iterate.
+      divergence_factor: the §15 detector threshold (> 1), see
+        ``PrismConfig.divergence_factor``.
 
-    Returns (iterates, used): the frozen/final iterates and the int32
-    per-slice count of updates actually applied.
+    Returns (iterates, used, status): the frozen/final iterates, the
+    int32 per-slice count of updates actually applied, and the int8
+    per-slice STATUS_OK / STATUS_MAXITER / STATUS_QUARANTINED code.
     """
     names = tuple(iterates)
 
@@ -189,21 +211,40 @@ def adaptive_masked_loop(iterates, fit, step, tol: float, k0: int,
     def body(c):
         cur = {n: c[n] for n in names}
         aux, a, est = fit(cur, c["k"])
-        done = c["done"] | (est <= tol)
+        certified = est <= tol                 # NaN est never certifies
+        diverged = ~jnp.isfinite(est) | (est > divergence_factor * c["best"])
+        quarantine = diverged & ~certified & ~c["done"]
+        done = c["done"] | certified | quarantine
         active = ~done
+        improved = est < c["best"]             # finite: NaN compares False
+        keep = (improved & active)[..., None, None]
         new = step(cur, aux, a)
         mask = active[..., None, None]
+        qmask = quarantine[..., None, None]
         out = dict(c, k=c["k"] + 1, done=done,
-                   used=c["used"] + active.astype(jnp.int32))
+                   used=c["used"] + active.astype(jnp.int32),
+                   best=jnp.where(improved & active, est, c["best"]),
+                   status=jnp.where(quarantine, STATUS_QUARANTINED,
+                                    c["status"]))
         for n in names:
-            out[n] = jnp.where(mask, new[n], c[n])
+            # snapshot BEFORE rollback: the iterate the best est_r was
+            # measured on is the pre-step `cur`, not `new`
+            snap = jnp.where(keep, cur[n], c["snap." + n])
+            out["snap." + n] = snap
+            out[n] = jnp.where(qmask, snap, jnp.where(mask, new[n], c[n]))
         return out
 
     carry = dict(iterates, k=jnp.asarray(k0, jnp.int32),
                  done=jnp.zeros(batch, bool),
-                 used=jnp.zeros(batch, jnp.int32))
+                 used=jnp.zeros(batch, jnp.int32),
+                 best=jnp.full(batch, jnp.inf, jnp.float32),
+                 status=jnp.zeros(batch, jnp.int8))
+    for n in names:
+        carry["snap." + n] = iterates[n]
     out = jax.lax.while_loop(cond, body, carry)
-    return {n: out[n] for n in names}, out["used"]
+    status = jnp.where(out["done"], out["status"],
+                       jnp.asarray(STATUS_MAXITER))
+    return {n: out[n] for n in names}, out["used"], status
 
 
 def resolve_alpha(

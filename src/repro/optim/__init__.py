@@ -9,13 +9,19 @@ from repro.optim.shampoo import make_shampoo
 def make_optimizer(cfg: OptimizerConfig, axes_tree=None) -> base.Optimizer:
     if cfg.name == "muon":
         assert axes_tree is not None
-        return make_muon(cfg, axes_tree)
-    if cfg.name == "shampoo":
+        opt = make_muon(cfg, axes_tree)
+    elif cfg.name == "shampoo":
         assert axes_tree is not None
-        return make_shampoo(cfg, axes_tree)
-    if cfg.name == "adamw":
-        return make_adamw(cfg)
-    raise ValueError(f"unknown optimizer {cfg.name!r}")
+        opt = make_shampoo(cfg, axes_tree)
+    elif cfg.name == "adamw":
+        opt = make_adamw(cfg)
+    else:
+        raise ValueError(f"unknown optimizer {cfg.name!r}")
+    if cfg.skip_nonfinite:
+        # §15 skip-step guard: roll back params AND state on any
+        # non-finite gradient/update under one lax.cond (base.py)
+        opt = base.skip_nonfinite(opt, cfg)
+    return opt
 
 
 __all__ = ["base", "compression", "make_adamw", "make_muon",

@@ -54,6 +54,7 @@ class Optimizer(NamedTuple):
 PENDING_STATE_KEYS = frozenset({
     "ortho_p", "Linv_p", "Rinv_p",
     "iters_p", "Linv_iters_p", "Rinv_iters_p",
+    "status_p", "Linv_status_p", "Rinv_status_p",
 })
 
 #: ``state["pending_at"]`` value meaning "no refresh in flight".  A large
@@ -115,6 +116,23 @@ def install_pending(state, partials, at_step: int):
                 pending_at=jnp.asarray(at_step, jnp.int32))
 
 
+def snapshot_overwritten_active(state, partials):
+    """Per-slot snapshot of the ACTIVE (non-pending) keys a refresh
+    result is about to overwrite (§15).
+
+    ``install_pending`` merges the whole partial into the slot — the
+    ``*_p`` twins stay inert until the swap, but active keys riding
+    along (the ``rnorm``/``dnorm`` drift trackers, reset at dispatch)
+    land immediately.  If the buffer later fails validation, the service
+    restores this snapshot so a poisoned refresh leaves ZERO residue in
+    the active plane (a NaN ``rnorm`` would silently disarm the drift
+    trigger: NaN comparisons are False).  Pure reference capture — no
+    device compute or copies."""
+    slots, _ = _flat_slots(state["leaves"])
+    return [{k: s[k] for k in p if k not in PENDING_STATE_KEYS and k in s}
+            if p else None for s, p in zip(slots, partials)]
+
+
 def discard_pending(state):
     """Mark any in-flight pending preconditioner stale (§12): a state
     restored mid-interval (checkpoint resume, elastic restart) must
@@ -144,6 +162,18 @@ def precond_drift(state) -> jax.Array:
     return jnp.max(jnp.stack(ds))
 
 
+def _partials_finite(partials) -> jax.Array:
+    """0-d bool: every float entry of a refresh result is finite.  A
+    tiny jitted reduction dispatched ALONGSIDE the refresh chains (§15)
+    — reading it later costs one scalar transfer, not a sync on the
+    chains' GEMMs beyond what the swap itself would pay."""
+    checks = [jnp.all(jnp.isfinite(l)) for l in jax.tree.leaves(partials)
+              if jnp.issubdtype(l.dtype, jnp.floating)]
+    if not checks:
+        return jnp.asarray(True)
+    return jnp.all(jnp.stack(checks))
+
+
 class AsyncPrecondService:
     """Host-side scheduler of the double-buffered refresh plane (§12).
 
@@ -153,9 +183,21 @@ class AsyncPrecondService:
     pending buffers via ``install_pending``, and keeps the
     ``matfn_telemetry`` counters the trainer logs.
 
+    Validated install (§15): every dispatch also enqueues a tiny
+    finiteness reduction over the pending twins.  The verdict is read
+    just before the swap would fire; a non-finite buffer is DISCARDED
+    (``discard_pending`` — the poisoned twin is never swapped active)
+    and the refresh re-dispatched with capped exponential backoff
+    (1, 2, 4, ... steps, capped at the refresh period).  After
+    ``cfg.precond_max_retries`` consecutive failures the slot degrades
+    gracefully: the update keeps serving the last good ACTIVE buffer,
+    the loud ``degraded`` counter increments, and only the next regular
+    clock/drift trigger tries again.
+
     >>> svc.matfn_telemetry                      # doctest: +SKIP
     {'refreshes': 7, 'drift_triggered': 5, 'clock_triggered': 1,
-     'bootstrap': 1, 'last_drift': 0.013}
+     'bootstrap': 1, 'discarded': 0, 'retries': 0, 'degraded': 0,
+     'last_drift': 0.013}
     """
 
     def __init__(self, opt: Optimizer, cfg, refresh_jit=None):
@@ -165,12 +207,19 @@ class AsyncPrecondService:
         self.period = resolve_refresh_period(cfg)
         self.swap_delay = int(cfg.precond_swap_delay)
         self.threshold = cfg.drift_threshold
+        self.max_retries = int(getattr(cfg, "precond_max_retries", 3))
         self._refresh = refresh_jit if refresh_jit is not None \
             else jax.jit(opt.refresh)
+        self._validate = jax.jit(_partials_finite)
+        self._pending_check = None  # in-flight finiteness verdict
+        self._overwritten = None  # active-key snapshot for clean discard
+        self._retry_at: Optional[int] = None
+        self.failures = 0  # consecutive validation failures
         self.last_dispatch: Optional[int] = None
         self.last_drift: float = 0.0
         self.counters = {"refreshes": 0, "drift_triggered": 0,
-                         "clock_triggered": 0, "bootstrap": 0}
+                         "clock_triggered": 0, "bootstrap": 0,
+                         "discarded": 0, "retries": 0, "degraded": 0}
 
     def due(self, step: int, drift: float) -> Optional[str]:
         """None, or why a refresh should dispatch at ``step``."""
@@ -179,38 +228,127 @@ class AsyncPrecondService:
         if step <= self.last_dispatch + self.swap_delay:
             # previous refresh's swap has not run yet (it runs inside the
             # update of step last_dispatch + swap_delay): dispatching now
-            # would overwrite a never-consumed pending buffer
+            # would overwrite a never-consumed pending buffer.  (A
+            # discarded buffer's retry is scheduled past this window, so
+            # backoff re-dispatches are never blocked here.)
             return None
+        if self._retry_at is not None and step >= self._retry_at:
+            return "retries"  # backoff re-dispatch after a discard
         if step - self.last_dispatch >= self.period:
             return "clock_triggered"  # the fixed-schedule ceiling
         if self.threshold is not None and drift >= self.threshold:
             return "drift_triggered"
         return None
 
+    def _check_pending(self, state, step: int, force: bool = False):
+        """Read the in-flight validation verdict once the swap is about
+        to fire; discard + schedule a backoff retry on failure."""
+        if self._pending_check is None or self.last_dispatch is None:
+            return state
+        if not force and step < self.last_dispatch + self.swap_delay:
+            return state  # swap not due yet — keep the check in flight
+        ok = bool(self._pending_check)
+        self._pending_check = None
+        if ok:
+            self.failures = 0
+            self._retry_at = None
+            self._overwritten = None
+            return state
+        # poisoned twin: never swap it in, and roll back the active keys
+        # (drift trackers) its install overwrote — zero residue
+        if self._overwritten is not None:
+            state = install_pending(state, self._overwritten, 0)
+            self._overwritten = None
+        state = discard_pending(state)
+        self.counters["discarded"] += 1
+        self.failures += 1
+        if self.failures >= self.max_retries:
+            # degrade: keep serving the last good active buffer; only
+            # the next regular clock/drift trigger re-attempts
+            self.counters["degraded"] += 1
+            self._retry_at = None
+        else:
+            backoff = min(2 ** (self.failures - 1), self.period)
+            self._retry_at = step + backoff
+        return state
+
     def step_begin(self, state, step: int, key, drift: float = 0.0):
-        """Phase 1 of the two-phase step loop: maybe dispatch a refresh.
+        """Phase 1 of the two-phase step loop: validate any in-flight
+        pending buffer whose swap is due, then maybe dispatch a refresh.
 
         Non-blocking — the chains are enqueued and the pending buffers
-        installed as futures; nothing here waits on device compute.  The
+        installed as futures; nothing here waits on device compute
+        except the one-scalar validation verdict at swap time.  The
         bootstrap dispatch back-dates ``pending_at`` so its swap fires on
         this very step (the first step then waits on its own
-        preconditioner, exactly like a blocking first step would).
+        preconditioner, exactly like a blocking first step would) — its
+        validation is therefore read immediately too.
         """
         self.last_drift = drift
+        state = self._check_pending(state, step)
         reason = self.due(step, drift)
         if reason is None:
             return state
         partials = self._refresh(state, key)
         at = step - self.swap_delay if reason == "bootstrap" else step
+        self._overwritten = snapshot_overwritten_active(state, partials)
         state = install_pending(state, partials, at)
+        self._pending_check = self._validate(partials)
         self.last_dispatch = step
+        self._retry_at = None
         self.counters["refreshes"] += 1
         self.counters[reason] += 1
+        if reason == "bootstrap":
+            # bootstrap swaps inside this very step's update: the
+            # verdict must be read now, not next step
+            state = self._check_pending(state, step, force=True)
         return state
 
     @property
     def matfn_telemetry(self) -> dict:
         return dict(self.counters, last_drift=self.last_drift)
+
+
+def skip_nonfinite(opt: Optimizer, cfg=None) -> Optimizer:
+    """§15 skip-step guard: gate the whole (params, state) write on ONE
+    fused finiteness check over the gradients and the proposed params.
+
+    A non-finite gradient (loss spike, bf16 overflow, a poisoned batch)
+    would otherwise contaminate the momentum/EMA accumulators FOREVER —
+    0 * NaN is NaN, so no later step washes it out.  The guard instead
+    replays the step as an exact no-op: both params and the inner state
+    roll back under a single ``lax.cond`` (a per-buffer select — zero
+    extra matrix-function launches, the §12 steady-state contract is
+    untouched), and only a ``bad_steps`` int32 counter at the state root
+    advances.  ``count`` does NOT advance on a skipped step, so the
+    staleness clock never serves a cache computed across a hole.
+
+    Checking grads AND proposed params covers both poisoning paths:
+    bad inputs (grads) and bad arithmetic on good inputs (an overflowing
+    EMA factor surfaces as a non-finite update before it can land).
+
+    Wrapped via ``make_optimizer`` when ``cfg.skip_nonfinite`` — off by
+    default so existing state trees stay bit-identical.  The refresh
+    plane passes through unchanged (it reads ``state["leaves"]`` only,
+    and install/discard_pending preserve unknown root keys).
+    """
+    def init(params):
+        return dict(opt.init(params), bad_steps=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, step, key, refresh=None):
+        inner = {k: v for k, v in state.items() if k != "bad_steps"}
+        new_p, new_s = opt.update(grads, inner, params, step, key,
+                                  refresh=refresh)
+        bad = sum(jnp.sum(~jnp.isfinite(l.astype(jnp.float32)))
+                  for l in jax.tree.leaves(grads) + jax.tree.leaves(new_p))
+        ok = bad == 0
+        out_p, out_s = jax.lax.cond(ok,
+                                    lambda: (new_p, new_s),
+                                    lambda: (params, inner))
+        return out_p, dict(out_s, bad_steps=state["bad_steps"]
+                           + (~ok).astype(jnp.int32))
+
+    return Optimizer(init, update, opt.refresh)
 
 
 def global_norm(tree) -> jax.Array:
@@ -220,8 +358,19 @@ def global_norm(tree) -> jax.Array:
 
 
 def clip_by_global_norm(grads, max_norm: float):
+    """Scale grads so their global norm is at most ``max_norm``.
+
+    Guarded (§15): a zero tree keeps scale 1 instead of dividing by
+    zero, and a NON-FINITE global norm passes the gradients through
+    UNSCALED — the naive ``max_norm / gn`` would turn one inf gradient
+    entry into an all-zero (gn=inf => scale 0) or all-NaN step that the
+    skip-step guard downstream could no longer distinguish from a real
+    signal.  The raw (possibly non-finite) norm is still returned for
+    telemetry."""
     gn = global_norm(grads)
-    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    scale = jnp.where(jnp.isfinite(gn),
+                      jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12)),
+                      1.0)
     return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
 
 

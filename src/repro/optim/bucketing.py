@@ -364,12 +364,13 @@ def polar_bucketed(views: Sequence[jax.Array], cfg: OptimizerConfig,
     SVD method excepted, whose LAPACK path is pinned fp32 (DESIGN.md §9).
 
     ``with_iters`` (NS family only, i.e. method prism/newton_schulz)
-    additionally returns per-view ``iters_used`` telemetry (DESIGN.md
-    §11): the realized iteration count of every slice, scattered back to
-    each view's lead shape — returns (outs, iters).  With ``cfg``'s
+    additionally returns per-view ``iters_used`` AND guardian ``status``
+    telemetry (DESIGN.md §11/§15): the realized iteration count and the
+    int8 prism.STATUS_* code of every slice, scattered back to each
+    view's lead shape — returns (outs, iters, statuses).  With ``cfg``'s
     resolved ``tol`` set the counts are data-dependent (each bucket's
     while_loop exits when its slowest slice certifies); otherwise they
-    are the static budget.
+    are the static budget and the statuses all-zeros.
     """
     method = cfg.matfn_method
     pcfg = cfg.resolved_prism
@@ -383,6 +384,7 @@ def polar_bucketed(views: Sequence[jax.Array], cfg: OptimizerConfig,
     mesh, mesh_axes = mesh_batch_axes(cfg)
     outs: List[Optional[jax.Array]] = [None] * len(views)
     iters: List[Optional[jax.Array]] = [None] * len(views)
+    statuses: List[Optional[jax.Array]] = [None] * len(views)
     for bi, b in enumerate(buckets):
         stacked = gather_bucket(b, views, dtype=compute)
         local_reshard = (cfg.muon_local_reshard
@@ -415,7 +417,7 @@ def polar_bucketed(views: Sequence[jax.Array], cfg: OptimizerConfig,
                 return lr.polar_lowrank(
                     x, cfg.lowrank_rank, cfg.lowrank_oversample,
                     cfg=pcfg, key=_kk, method=method,
-                    return_iters=with_iters)
+                    return_iters=with_iters, return_status=with_iters)
 
             n_real = None
         else:
@@ -429,6 +431,7 @@ def polar_bucketed(views: Sequence[jax.Array], cfg: OptimizerConfig,
                 kw = {"n_real": nr[0]} if nr else {}
                 if with_iters:  # NS family only (asserted above)
                     kw["return_iters"] = True
+                    kw["return_status"] = True
                 return matfn.polar(x, method=method, cfg=_pcfg, key=_kk,
                                    **kw)
 
@@ -438,15 +441,16 @@ def polar_bucketed(views: Sequence[jax.Array], cfg: OptimizerConfig,
                 run, mesh, mesh_axes, stacked,
                 slice_args=() if n_real is None else (n_real,),
                 slice_pads=() if n_real is None else (gram_full,),
-                out_ranks=(3, 1) if with_iters else None)
+                out_ranks=(3, 1, 1) if with_iters else None)
         else:
             O = run(stacked) if n_real is None else run(stacked, n_real)
         if with_iters:
-            O, it = O
+            O, it, st = O
             scatter_bucket_aux(b, it, iters)
+            scatter_bucket_aux(b, st, statuses)
         scatter_bucket(b, O, outs)
     if with_iters:
-        return outs, iters
+        return outs, iters, statuses
     return outs  # type: ignore[return-value]
 
 
@@ -454,8 +458,8 @@ def polar_refresh(views: Sequence[jax.Array], cfg: OptimizerConfig,
                   key: Optional[jax.Array]):
     """The Muon preconditioner refresh as one standalone callable
     (DESIGN.md §12): polar factors of every view, telemetry included iff
-    ``cfg.matfn_telemetry``.  Returns ``(outs, iters)`` with ``iters``
-    None when telemetry is off.
+    ``cfg.matfn_telemetry``.  Returns ``(outs, iters, statuses)`` with
+    ``iters``/``statuses`` None when telemetry is off.
 
     This is the exact computation a blocking in-step refresh runs —
     factored out of the update so the async service can jit and dispatch
@@ -465,24 +469,28 @@ def polar_refresh(views: Sequence[jax.Array], cfg: OptimizerConfig,
     as usual.
     """
     if not cfg.bucketed:
-        outs, its = [], []
+        outs, its, sts = [], [], []
         for i, M in enumerate(views):
             kk = jax.random.fold_in(key, i) if key is not None else None
             if cfg.matfn_method == "svd":
                 outs.append(matfn.polar(M, method="svd"))
             elif cfg.matfn_telemetry:
-                O, it = matfn.polar(M, method=cfg.matfn_method,
-                                    cfg=cfg.resolved_prism, key=kk,
-                                    return_iters=True)
+                O, it, st = matfn.polar(M, method=cfg.matfn_method,
+                                        cfg=cfg.resolved_prism, key=kk,
+                                        return_iters=True,
+                                        return_status=True)
                 outs.append(O)
                 its.append(it)
+                sts.append(st)
             else:
                 outs.append(matfn.polar(M, method=cfg.matfn_method,
                                         cfg=cfg.resolved_prism, key=kk))
-        return outs, (its if cfg.matfn_telemetry else None)
+        if cfg.matfn_telemetry:
+            return outs, its, sts
+        return outs, None, None
     if cfg.matfn_telemetry:
         return polar_bucketed(views, cfg, key, with_iters=True)
-    return polar_bucketed(views, cfg, key), None
+    return polar_bucketed(views, cfg, key), None, None
 
 
 def transform_bucketed(mats: Sequence[jax.Array], fn,
@@ -491,11 +499,12 @@ def transform_bucketed(mats: Sequence[jax.Array], fn,
     """Apply ``fn(stacked, bucket, bucket_index)`` once per exact-shape
     bucket and scatter the [B, n, n] results back.
 
-    ``with_aux``: fn returns (out [B, n, n], aux [B]) — a per-slice
-    companion (the §11 ``iters_used`` telemetry of Shampoo's inverse
-    roots) scattered back alongside; returns (outs, auxs).  The aux
-    must be per-slice like the output itself, so it shards/gathers with
-    the batch dim unchanged.
+    ``with_aux``: an int N (bool True == 1) — fn returns
+    (out [B, n, n], aux_1 [B], ..., aux_N [B]), per-slice companions
+    (the §11 ``iters_used`` and §15 ``status`` telemetry of Shampoo's
+    inverse roots) scattered back alongside; returns
+    (outs, auxs_1, ..., auxs_N).  Each aux must be per-slice like the
+    output itself, so it shards/gathers with the batch dim unchanged.
 
     The generic engine for matrix functions without a pad-exactness story
     (Shampoo inverse roots).  Gathers stay fp32 here: the stacked arrays
@@ -514,22 +523,25 @@ def transform_bucketed(mats: Sequence[jax.Array], fn,
     ``_fused_tier``) from the same static bucket shape — callers pick it
     up with zero changes, exactly like ``polar_bucketed``.
     """
+    n_aux = int(with_aux)
     buckets = plan_buckets([m.shape for m in mats], pad=False)
     mesh, mesh_axes = mesh_batch_axes(cfg)
     outs: List[Optional[jax.Array]] = [None] * len(mats)
-    auxs: List[Optional[jax.Array]] = [None] * len(mats)
+    auxs = [[None] * len(mats) for _ in range(n_aux)]
     for bi, b in enumerate(buckets):
         stacked = gather_bucket(b, mats)
         if mesh is not None:
-            out = shard_over_batch(lambda x, _b=b, _bi=bi: fn(x, _b, _bi),
-                                   mesh, mesh_axes, stacked,
-                                   out_ranks=(3, 1) if with_aux else None)
+            out = shard_over_batch(
+                lambda x, _b=b, _bi=bi: fn(x, _b, _bi),
+                mesh, mesh_axes, stacked,
+                out_ranks=(3,) + (1,) * n_aux if n_aux else None)
         else:
             out = fn(stacked, b, bi)
-        if with_aux:
-            out, aux = out
-            scatter_bucket_aux(b, aux, auxs)
+        if n_aux:
+            out, *aux = out
+            for k in range(n_aux):
+                scatter_bucket_aux(b, aux[k], auxs[k])
         scatter_bucket(b, out, outs)
-    if with_aux:
-        return outs, auxs
+    if n_aux:
+        return (outs, *auxs)
     return outs  # type: ignore[return-value]

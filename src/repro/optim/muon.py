@@ -77,7 +77,9 @@ def make_muon(cfg: OptimizerConfig, axes_tree) -> base.Optimizer:
     # iteration counts ("iters", the view's lead shape, int32) ride in
     # the state next to the momentum — observability for schedules,
     # benchmarks and tests, refreshed whenever the polar chains run and
-    # carried through stale (cached) steps untouched.
+    # carried through stale (cached) steps untouched.  §15 adds the
+    # per-matrix int8 guardian "status" (prism.STATUS_*) alongside, on
+    # the same refresh/stale/swap lifecycle.
     telemetry = cfg.matfn_telemetry
     # §14: with the lowrank tier enabled Muon claims embedding/LM-head/
     # codebook leaves too (base.is_matrix_param), and every matrix leaf
@@ -101,6 +103,7 @@ def make_muon(cfg: OptimizerConfig, axes_tree) -> base.Optimizer:
                     jax.ShapeDtypeStruct(p.shape, jnp.float32)).shape
                 if telemetry:
                     s["iters"] = jnp.zeros(vshape[:-2], jnp.int32)
+                    s["status"] = jnp.zeros(vshape[:-2], jnp.int8)
                 if allow_embed:
                     s["tier"] = jnp.full(
                         (), bucketing.TIER_CODES[bucketing.resolve_tier(
@@ -125,6 +128,7 @@ def make_muon(cfg: OptimizerConfig, axes_tree) -> base.Optimizer:
                     s["rnorm"] = jnp.zeros((), jnp.float32)
                     if telemetry:
                         s["iters_p"] = jnp.zeros(vshape[:-2], jnp.int32)
+                        s["status_p"] = jnp.zeros(vshape[:-2], jnp.int8)
                 state.append(s)
             else:
                 state.append({"mom": mom,
@@ -139,8 +143,9 @@ def make_muon(cfg: OptimizerConfig, axes_tree) -> base.Optimizer:
 
     def _polar_per_leaf(views, leaf_idx, key):
         """Legacy per-leaf dispatch: one polar chain per matrix leaf.
-        Returns (outs, iters) with iters None unless telemetry."""
-        outs, its = [], []
+        Returns (outs, iters, statuses) with the latter two None unless
+        telemetry."""
+        outs, its, sts = [], [], []
         for M, i in zip(views, leaf_idx):
             if cfg.muon_local_reshard and M.ndim >= 3:
                 # layers -> model, rows -> data: the NS iterations then
@@ -153,17 +158,27 @@ def make_muon(cfg: OptimizerConfig, axes_tree) -> base.Optimizer:
                     + ("opt_rows", None))
             kk = jax.random.fold_in(key, i) if key is not None else None
             if cfg.matfn_method == "svd":
-                outs.append(matfn.polar(M, method="svd"))
+                if telemetry:
+                    O, it, st = matfn.polar(M, method="svd",
+                                            return_iters=True,
+                                            return_status=True)
+                    outs.append(O)
+                    its.append(it)
+                    sts.append(st)
+                else:
+                    outs.append(matfn.polar(M, method="svd"))
             elif telemetry:
-                O, it = matfn.polar(M, method=cfg.matfn_method,
-                                    cfg=cfg.resolved_prism, key=kk,
-                                    return_iters=True)
+                O, it, st = matfn.polar(M, method=cfg.matfn_method,
+                                        cfg=cfg.resolved_prism, key=kk,
+                                        return_iters=True,
+                                        return_status=True)
                 outs.append(O)
                 its.append(it)
+                sts.append(st)
             else:
                 outs.append(matfn.polar(M, method=cfg.matfn_method,
                                         cfg=cfg.resolved_prism, key=kk))
-        return outs, (its if telemetry else None)
+        return (outs, its, sts) if telemetry else (outs, None, None)
 
     def update(grads, state, params, step, key, refresh=None):
         flat_g, flat_a, treedef = _flatten_with_axes(grads, axes_tree)
@@ -223,7 +238,8 @@ def make_muon(cfg: OptimizerConfig, axes_tree) -> base.Optimizer:
                 if telemetry:
                     return bucketing.polar_bucketed(views, cfg, key,
                                                     with_iters=True)
-                return bucketing.polar_bucketed(views, cfg, key), None
+                return (bucketing.polar_bucketed(views, cfg, key),
+                        None, None)
             return _polar_per_leaf(views, leaf_idx, key)
 
         if cfg.precond_async and views:
@@ -241,12 +257,14 @@ def make_muon(cfg: OptimizerConfig, axes_tree) -> base.Optimizer:
             if telemetry:
                 it_p = [flat_s[i]["iters_p"] for i in leaf_idx]
                 it_a = [flat_s[i]["iters"] for i in leaf_idx]
-                polars, its, new_pending_at = jax.lax.cond(
+                st_p = [flat_s[i]["status_p"] for i in leaf_idx]
+                st_a = [flat_s[i]["status"] for i in leaf_idx]
+                polars, its, sts, new_pending_at = jax.lax.cond(
                     do_swap,
-                    lambda: (pend, it_p, none_pending),
-                    lambda: (act, it_a, pending_at))
+                    lambda: (pend, it_p, st_p, none_pending),
+                    lambda: (act, it_a, st_a, pending_at))
             else:
-                its = None
+                its = sts = None
                 polars, new_pending_at = jax.lax.cond(
                     do_swap,
                     lambda: (pend, none_pending),
@@ -256,37 +274,42 @@ def make_muon(cfg: OptimizerConfig, axes_tree) -> base.Optimizer:
                 new_s[i]["ortho_p"] = pend[j]
                 if telemetry:
                     new_s[i]["iters_p"] = it_p[j]
+                    new_s[i]["status_p"] = st_p[j]
         elif cfg.precond_every > 1 and views:
             cache_dt = jnp.dtype(cfg.cache_dtype)
             cached = [flat_s[i]["ortho"] for i in leaf_idx]
             cached_it = ([flat_s[i]["iters"] for i in leaf_idx]
+                         if telemetry else None)
+            cached_st = ([flat_s[i]["status"] for i in leaf_idx]
                          if telemetry else None)
 
             def compute_cached():
                 # round to the cache dtype up front: both lax.cond
                 # branches carry the same dtype, and refresh vs stale
                 # steps apply identical (cache-rounded) polars
-                polars, its = compute_polars()
-                return [O.astype(cache_dt) for O in polars], its
+                polars, its, sts = compute_polars()
+                return [O.astype(cache_dt) for O in polars], its, sts
 
             def stale():
                 # stale steps reuse the cache AND its telemetry: "iters"
-                # always describes the most recent refresh
+                # and "status" always describe the most recent refresh
                 return (list(cached),
-                        list(cached_it) if telemetry else None)
+                        list(cached_it) if telemetry else None,
+                        list(cached_st) if telemetry else None)
 
             if isinstance(refresh, bool):  # static: picked at trace time
-                polars, its = compute_cached() if refresh else stale()
+                polars, its, sts = compute_cached() if refresh else stale()
             else:
                 do = (state["count"] % cfg.precond_every) == 0
-                polars, its = jax.lax.cond(do, compute_cached, stale)
+                polars, its, sts = jax.lax.cond(do, compute_cached, stale)
             for j, i in enumerate(leaf_idx):
                 new_s[i]["ortho"] = polars[j]
         else:
-            polars, its = compute_polars()
+            polars, its, sts = compute_polars()
         if telemetry:
             for j, i in enumerate(leaf_idx):
                 new_s[i]["iters"] = its[j]
+                new_s[i]["status"] = sts[j]
         # pass 2: aspect-scale, un-view, apply
         for O, meta, i in zip(polars, metas, leaf_idx):
             p = flat_p[i]
@@ -321,7 +344,7 @@ def make_muon(cfg: OptimizerConfig, axes_tree) -> base.Optimizer:
         partials: list = [{} for _ in slots]
         if not views:
             return partials
-        outs, its = bucketing.polar_refresh(views, cfg, key)
+        outs, its, sts = bucketing.polar_refresh(views, cfg, key)
         cache_dt = jnp.dtype(cfg.cache_dtype)
         for j, i in enumerate(idx):
             # zero-slice guard: the bootstrap dispatch runs before any
@@ -337,6 +360,7 @@ def make_muon(cfg: OptimizerConfig, axes_tree) -> base.Optimizer:
                  "dnorm": jnp.zeros((), jnp.float32)}
             if telemetry:
                 p["iters_p"] = its[j]
+                p["status_p"] = sts[j]
             partials[i] = p
         return partials
 

@@ -60,9 +60,10 @@ from repro.optim.muon import _flatten_with_axes
 
 def _inv_root(A, p, cfg: OptimizerConfig, key, with_iters: bool = False):
     """A^{-1/p} per ``cfg.matfn_method``; ``with_iters`` appends the
-    §11 ``iters_used`` telemetry (data-dependent under an adaptive
-    ``cfg.matfn_tol``; fit-free baselines report 0 — they certify
-    nothing)."""
+    §11 ``iters_used`` telemetry AND the §15 int8 guardian status
+    (data-dependent under an adaptive ``cfg.matfn_tol``; fit-free
+    baselines report 0 — they certify nothing and cannot diverge out
+    of a fixed schedule)."""
     # the eps-ridge is applied to the fp32 EMA factor BEFORE any cast:
     # a bf16 ridge would round away eps against trace-scale entries (§9)
     eps = cfg.shampoo_eps
@@ -73,8 +74,8 @@ def _inv_root(A, p, cfg: OptimizerConfig, key, with_iters: bool = False):
     m = cfg.matfn_method
 
     def plain(out):
-        return (out, jnp.zeros(A.shape[:-2], jnp.int32)) if with_iters \
-            else out
+        return (out, jnp.zeros(A.shape[:-2], jnp.int32),
+                jnp.zeros(A.shape[:-2], jnp.int8)) if with_iters else out
 
     if m == "eigh":
         return plain(matfn.inv_proot(Ad, p=p, method="eigh"))
@@ -87,15 +88,18 @@ def _inv_root(A, p, cfg: OptimizerConfig, key, with_iters: bool = False):
                                  iters=pc.iterations)[1])
     if p == 2:
         if with_iters:
-            (_, isq), it = matfn.sqrtm(Ad, method="prism", cfg=pc, key=key,
-                                       iters=pc.iterations,
-                                       return_iters=True)
-            return isq, it
+            (_, isq), it, st = matfn.sqrtm(Ad, method="prism", cfg=pc,
+                                           key=key, iters=pc.iterations,
+                                           return_iters=True,
+                                           return_status=True)
+            return isq, it, st
         return matfn.sqrtm(Ad, method="prism", cfg=pc, key=key,
                            iters=pc.iterations)[1]
     return matfn.inv_proot(Ad, p=p, method="prism", key=key,
                            iters=pc.iterations, dtype=jnp.dtype(pc.dtype),
-                           tol=pc.tol, return_iters=with_iters)
+                           tol=pc.tol, return_iters=with_iters,
+                           return_status=with_iters,
+                           divergence_factor=pc.divergence_factor)
 
 
 def make_shampoo(cfg: OptimizerConfig, axes_tree,
@@ -123,6 +127,7 @@ def make_shampoo(cfg: OptimizerConfig, axes_tree,
                     s["Linv"] = jnp.zeros(lead + (m, m), cache_dt)
                     if telemetry:
                         s["Linv_iters"] = jnp.zeros(lead, jnp.int32)
+                        s["Linv_status"] = jnp.zeros(lead, jnp.int8)
                 else:
                     s["diagL"] = jnp.zeros(lead + (m,), jnp.float32)
                 if n <= maxd:
@@ -130,6 +135,7 @@ def make_shampoo(cfg: OptimizerConfig, axes_tree,
                     s["Rinv"] = jnp.zeros(lead + (n, n), cache_dt)
                     if telemetry:
                         s["Rinv_iters"] = jnp.zeros(lead, jnp.int32)
+                        s["Rinv_status"] = jnp.zeros(lead, jnp.int8)
                 else:
                     s["diagR"] = jnp.zeros(lead + (n,), jnp.float32)
                 if cfg.precond_async:
@@ -139,10 +145,12 @@ def make_shampoo(cfg: OptimizerConfig, axes_tree,
                         s["Linv_p"] = jnp.zeros_like(s["Linv"])
                         if telemetry:
                             s["Linv_iters_p"] = jnp.zeros(lead, jnp.int32)
+                            s["Linv_status_p"] = jnp.zeros(lead, jnp.int8)
                     if "Rinv" in s:
                         s["Rinv_p"] = jnp.zeros_like(s["Rinv"])
                         if telemetry:
                             s["Rinv_iters_p"] = jnp.zeros(lead, jnp.int32)
+                            s["Rinv_status_p"] = jnp.zeros(lead, jnp.int8)
                     if "Linv" in s or "Rinv" in s:
                         s["dnorm"] = jnp.zeros((), jnp.float32)
                         s["rnorm"] = jnp.zeros((), jnp.float32)
@@ -160,10 +168,10 @@ def make_shampoo(cfg: OptimizerConfig, axes_tree,
         """Freshly computed inverse roots for ``jobs`` — the single body
         shared by the in-step recompute branch AND the §12 refresh plane,
         so the two can never drift apart.  ``jobs`` is a flat list of
-        ``(slot, "Linv"/"Rinv", A, side)``; returns ``(invs, its)`` with
-        ``its`` None unless telemetry.  Bucketed: one batched call per
-        shape bucket across ALL jobs, keys folded by bucket; per-leaf:
-        keys folded by (slot, side)."""
+        ``(slot, "Linv"/"Rinv", A, side)``; returns ``(invs, its, sts)``
+        with ``its``/``sts`` None unless telemetry.  Bucketed: one
+        batched call per shape bucket across ALL jobs, keys folded by
+        bucket; per-leaf: keys folded by (slot, side)."""
         cache_dt = jnp.dtype(cfg.cache_dtype)
         mats = [A for (_, _, A, _) in jobs]
         if cfg.bucketed:
@@ -173,28 +181,30 @@ def make_shampoo(cfg: OptimizerConfig, axes_tree,
                 # cast INSIDE the per-bucket fn so lax.cond branches and
                 # the sharded all-gather both carry the cache dtype
                 if telemetry:
-                    inv, it = _inv_root(stacked, p_root, cfg, kk,
-                                        with_iters=True)
-                    return inv.astype(cache_dt), it
+                    inv, it, st = _inv_root(stacked, p_root, cfg, kk,
+                                            with_iters=True)
+                    return inv.astype(cache_dt), it, st
                 return _inv_root(stacked, p_root, cfg, kk).astype(cache_dt)
 
-            out = bucketing.transform_bucketed(mats, one_bucket, cfg,
-                                               with_aux=telemetry)
-            return out if telemetry else (out, None)
-        outs, its = [], []
+            out = bucketing.transform_bucketed(
+                mats, one_bucket, cfg, with_aux=2 if telemetry else 0)
+            return out if telemetry else (out, None, None)
+        outs, its, sts = [], [], []
         for (i, _, A, side) in jobs:
             kk = jax.random.fold_in(key, i) if key is not None else None
             if kk is not None and side:
                 kk = jax.random.fold_in(kk, 1)
             if telemetry:
-                inv, it = _inv_root(A, p_root, cfg, kk, with_iters=True)
+                inv, it, st = _inv_root(A, p_root, cfg, kk,
+                                        with_iters=True)
                 outs.append(inv.astype(cache_dt))
                 its.append(it)
+                sts.append(st)
             else:
                 outs.append(_inv_root(A, p_root, cfg, kk).astype(cache_dt))
-        return outs, (its if telemetry else None)
+        return (outs, its, sts) if telemetry else (outs, None, None)
 
-    def _inv_roots(jobs, prevs, prev_its, recompute, key):
+    def _inv_roots(jobs, prevs, prev_its, prev_sts, recompute, key):
         """The in-step staleness schedule: all jobs under ONE recompute
         cond — the cache-hit branch returns the per-leaf cached inverses
         untouched, so steps between recomputes move zero preconditioner
@@ -202,7 +212,9 @@ def make_shampoo(cfg: OptimizerConfig, axes_tree,
         trace time instead — the skip variant contains no inverse-root
         ops."""
         def stale():
-            return list(prevs), (list(prev_its) if telemetry else None)
+            return (list(prevs),
+                    list(prev_its) if telemetry else None,
+                    list(prev_sts) if telemetry else None)
 
         def compute():
             return _fresh_invs(jobs, key)
@@ -223,7 +235,8 @@ def make_shampoo(cfg: OptimizerConfig, axes_tree,
         new_p = [None] * len(flat_g)
         new_s = [None] * len(flat_g)
         # pass 1: EMA the Kronecker factors; queue the inverse-root jobs
-        # jobs: (leaf, "Linv"/"Rinv", A, prev, prev_iters, key_ix)
+        # jobs: (leaf, "Linv"/"Rinv", A, prev, prev_iters, prev_status,
+        #        key_ix)
         matrix, jobs = [], []
         for i, (g, a, pp, s) in enumerate(zip(flat_g, flat_a, flat_p,
                                               flat_s)):
@@ -245,14 +258,14 @@ def make_shampoo(cfg: OptimizerConfig, axes_tree,
                 L = beta2 * s["L"] + jnp.einsum("...mk,...nk->...mn", G, G)
                 ns["L"] = L
                 jobs.append((i, "Linv", L, s["Linv"],
-                             s.get("Linv_iters"), 0))
+                             s.get("Linv_iters"), s.get("Linv_status"), 0))
             else:
                 ns["diagL"] = beta2 * s["diagL"] + jnp.sum(G * G, axis=-1)
             if "R" in s:
                 R = beta2 * s["R"] + jnp.einsum("...km,...kn->...mn", G, G)
                 ns["R"] = R
                 jobs.append((i, "Rinv", R, s["Rinv"],
-                             s.get("Rinv_iters"), 1))
+                             s.get("Rinv_iters"), s.get("Rinv_status"), 1))
             else:
                 ns["diagR"] = beta2 * s["diagR"] + jnp.sum(G * G, axis=-2)
             if cfg.precond_async and ("L" in s or "R" in s):
@@ -269,8 +282,9 @@ def make_shampoo(cfg: OptimizerConfig, axes_tree,
             new_s[i] = ns
         # inverse roots: one batched call per shape bucket across ALL
         # leaves' L and R factors (per-leaf loop behind cfg.bucketed=False)
-        prevs = [prev for (_, _, _, prev, _, _) in jobs]
-        prev_its = [it for (_, _, _, _, it, _) in jobs]
+        prevs = [prev for (_, _, _, prev, _, _, _) in jobs]
+        prev_its = [it for (_, _, _, _, it, _, _) in jobs]
+        prev_sts = [st for (_, _, _, _, _, st, _) in jobs]
         new_pending_at = None
         if cfg.precond_async:
             # §12 steady state: no inverse-root work in-step.  Serve the
@@ -281,37 +295,44 @@ def make_shampoo(cfg: OptimizerConfig, axes_tree,
             new_pending_at = pending_at
             if jobs:
                 pend = [flat_s[i][name + "_p"]
-                        for (i, name, _, _, _, _) in jobs]
+                        for (i, name, _, _, _, _, _) in jobs]
                 do_swap = (pending_at > base.NO_PENDING) & (
                     state["count"] >= pending_at + cfg.precond_swap_delay)
                 none_pending = jnp.full((), base.NO_PENDING, jnp.int32)
                 if telemetry:
                     it_p = [flat_s[i][name + "_iters_p"]
-                            for (i, name, _, _, _, _) in jobs]
-                    invs, its, new_pending_at = jax.lax.cond(
+                            for (i, name, _, _, _, _, _) in jobs]
+                    st_p = [flat_s[i][name + "_status_p"]
+                            for (i, name, _, _, _, _, _) in jobs]
+                    invs, its, sts, new_pending_at = jax.lax.cond(
                         do_swap,
-                        lambda: (pend, it_p, none_pending),
-                        lambda: (list(prevs), list(prev_its), pending_at))
+                        lambda: (pend, it_p, st_p, none_pending),
+                        lambda: (list(prevs), list(prev_its),
+                                 list(prev_sts), pending_at))
                 else:
-                    its = None
+                    its = sts = None
                     invs, new_pending_at = jax.lax.cond(
                         do_swap,
                         lambda: (pend, none_pending),
                         lambda: (list(prevs), pending_at))
-                for j, (i, name, _, _, _, _) in enumerate(jobs):
+                for j, (i, name, _, _, _, _, _) in enumerate(jobs):
                     new_s[i][name + "_p"] = pend[j]
                     if telemetry:
                         new_s[i][name + "_iters_p"] = it_p[j]
+                        new_s[i][name + "_status_p"] = st_p[j]
             else:
-                invs, its = [], ([] if telemetry else None)
+                invs = []
+                its = sts = ([] if telemetry else None)
         else:
             jobs4 = [(i, name, A, side)
-                     for (i, name, A, _, _, side) in jobs]
-            invs, its = _inv_roots(jobs4, prevs, prev_its, recompute, key)
-        for j, (i, name, _, _, _, _) in enumerate(jobs):
+                     for (i, name, A, _, _, _, side) in jobs]
+            invs, its, sts = _inv_roots(jobs4, prevs, prev_its, prev_sts,
+                                        recompute, key)
+        for j, (i, name, _, _, _, _, _) in enumerate(jobs):
             new_s[i][name] = invs[j]
             if telemetry:
                 new_s[i][name + "_iters"] = its[j]
+                new_s[i][name + "_status"] = sts[j]
         # pass 2: precondition, graft, momentum, apply
         for i, G, meta in matrix:
             s, ns = flat_s[i], new_s[i]
@@ -356,11 +377,12 @@ def make_shampoo(cfg: OptimizerConfig, axes_tree,
                 jobs.append((i, "Rinv", s["R"], 1))
         if not jobs:
             return partials
-        invs, its = _fresh_invs(jobs, key)
+        invs, its, sts = _fresh_invs(jobs, key)
         for j, (i, name, _, _) in enumerate(jobs):
             partials[i][name + "_p"] = invs[j]
             if telemetry:
                 partials[i][name + "_iters_p"] = its[j]
+                partials[i][name + "_status_p"] = sts[j]
         for i, s in enumerate(slots):
             if partials[i]:
                 # drift baseline resets to the dispatched factors

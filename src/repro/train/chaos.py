@@ -1,0 +1,404 @@
+"""Chaos drill: deterministic fault injection against the §15 guardians.
+
+Each drill injects exactly one fault into a smoke-scale training run and
+asserts the matching containment layer recovers to a finite-loss
+continuation:
+
+  nan_grad        — all-NaN gradient at step k -> the skip-step guard
+                    (optim.base.skip_nonfinite) replays the step as a
+                    bit-exact no-op; ``bad_steps`` == 1, every loss
+                    finite, params identical to the pre-step iterate.
+  spectrum_spike  — a rank-1 gradient spike at step k slams the momentum
+                    spectrum -> the §12 drift proxy jumps and the
+                    AsyncPrecondService dispatches a drift-triggered
+                    refresh instead of serving a stale preconditioner.
+  ckpt_corrupt    — bit-flips the newest checkpoint payload -> crc32
+                    MANIFEST verification rejects it and ``restore``
+                    falls back to the newest VALID step.
+  sigkill         — SIGKILL mid-step of the pipeline fault drill
+                    (train/fault.py) -> relaunch resumes from the newest
+                    complete checkpoint and continues BITWISE against an
+                    uninterrupted reference.
+  hang            — the child stalls (heartbeat stops) -> the Watchdog
+                    trips 'stale' and the drill aborts the child with a
+                    per-stage heartbeat diagnostic instead of hanging CI.
+
+All injections are deterministic: the gradient hooks are traced
+``jnp.where`` selects on the step counter (``inject`` arg of
+train/state.make_train_step — zero recompiles, the fault fires
+data-dependently at exactly step k), the corruption flips fixed bytes,
+and the kill triggers off the heartbeat file.
+
+Run as ``python -m repro.train.chaos [--inject all]``; each drill prints
+one ``CHAOS_REPORT <json>`` line and the process exits non-zero on the
+first containment failure.  tests/test_fault.py runs the injection
+matrix in CI (chaos leg).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import signal
+import subprocess
+import sys
+import tempfile
+import time
+from typing import Optional
+
+INJECTIONS = ("nan_grad", "spectrum_spike", "ckpt_corrupt", "sigkill",
+              "hang")
+
+
+# ------------------------------------------------------------ injectors
+
+def make_injector(kind: str, at_step: int, spike: float = 1e6):
+    """Traced gradient hook ``f(grads, step) -> grads`` for
+    train/state.make_train_step: pure jax, so the compiled step is
+    identical to the healthy one and the fault fires data-dependently
+    at exactly ``at_step``."""
+    import jax
+    import jax.numpy as jnp
+
+    if kind == "nan_grad":
+        def inject(grads, step):
+            # additive NaN poisons every leaf (0 * NaN = NaN): the worst
+            # case a diverged loss / bad batch can produce
+            poison = jnp.where(step == at_step, jnp.float32(jnp.nan),
+                               jnp.float32(0.0))
+            return jax.tree.map(lambda g: g + poison, grads)
+        return inject
+    if kind == "spectrum_spike":
+        def inject(grads, step):
+            # rank-1 spike: one huge entry redirects the post-clip
+            # gradient (clipping preserves direction), slamming the
+            # momentum spectrum the cached polar was computed from —
+            # the §12 drift proxy, not the finiteness guard, must react
+            amp = jnp.where(step == at_step, jnp.float32(spike),
+                            jnp.float32(0.0))
+
+            def one(g):
+                if g.ndim < 2:
+                    return g
+                return g.at[(0,) * g.ndim].add(amp)
+
+            return jax.tree.map(one, grads)
+        return inject
+    raise ValueError(f"no traced injector for {kind!r}")
+
+
+def corrupt_checkpoint(ckpt_dir: str, step: int, nbytes: int = 16) -> str:
+    """Deterministically bit-flip ``nbytes`` in the middle of a step's
+    payload (tree.npz), leaving META/MANIFEST intact — the signature of
+    storage bit rot / a torn write that still looks complete."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}", "tree.npz")
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.seek(size // 2)
+        block = f.read(nbytes)
+        f.seek(size // 2)
+        f.write(bytes(b ^ 0xFF for b in block))
+    return path
+
+
+# ------------------------------------------------------ in-process drills
+
+def build_chaos_trainer(ckpt_dir: str, *, inject=None, steps: int = 8,
+                        checkpoint_every: int = 0,
+                        async_precond: bool = False,
+                        drift_slack: float = 0.0,
+                        grad_clip_norm: float = 1.0,
+                        skip_nonfinite: bool = True):
+    """Smoke-scale single-host Trainer (mesh=None) with every §15 guard
+    armed: skip-step protection, divergence quarantine (rides the
+    adaptive tol), and — under ``async_precond`` — the validated
+    drift-triggered refresh plane."""
+    from repro.config import OptimizerConfig, PrismConfig, TrainConfig
+    from repro.configs import get_smoke_config
+    from repro.data import DataConfig
+    from repro.models import build
+    from repro.train.trainer import Trainer
+
+    cfg = get_smoke_config("qwen3-14b").replace(
+        d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+        dtype="float32")
+    model = build(cfg)
+    ocfg = OptimizerConfig(
+        name="muon", matfn_method="prism", matfn_tol=1e-2,
+        skip_nonfinite=skip_nonfinite, grad_clip_norm=grad_clip_norm,
+        precond_every=16 if async_precond else 1,
+        precond_async=async_precond,
+        precond_swap_delay=1 if async_precond else 2,
+        precond_drift_slack=drift_slack,
+        prism=PrismConfig(degree=2, iterations=3, warm_alpha_iters=3,
+                          sketch_dim=8, tol=1e-2))
+    tcfg = TrainConfig(steps=steps, checkpoint_dir=ckpt_dir,
+                       checkpoint_every=checkpoint_every, log_every=100,
+                       async_checkpoint=False)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                      global_batch=4, seed=0, markov_rank=8)
+    return Trainer(model, ocfg, tcfg, dcfg, inject=inject)
+
+
+def drill_nan_grad(workdir: str, at_step: int = 3, steps: int = 6) -> dict:
+    """NaN gradient at step k: the skip-step guard must eat it."""
+    import jax
+    import numpy as np
+
+    trainer = build_chaos_trainer(
+        os.path.join(workdir, "nan_grad"), steps=steps,
+        inject=make_injector("nan_grad", at_step))
+    params, opt_state, losses = trainer.run()
+    bad = int(opt_state["bad_steps"])
+    finite = all(math.isfinite(l) for l in losses)
+    params_finite = all(bool(np.all(np.isfinite(np.asarray(l))))
+                        for l in jax.tree.leaves(params))
+    ok = finite and params_finite and bad == 1 and len(losses) == steps
+    return {"injection": "nan_grad", "at_step": at_step,
+            "bad_steps": bad, "losses_finite": finite,
+            "params_finite": params_finite,
+            "recovered": ok}
+
+
+def drill_spectrum_spike(workdir: str, at_step: int = 4,
+                         steps: int = 10) -> dict:
+    """Rank-1 spike at step k: the drift proxy must jump and trigger an
+    async refresh (the preconditioner tracks the new spectrum instead of
+    serving a stale one until the clock ceiling)."""
+    drifts = {}
+
+    def on_metrics(t, metrics):
+        drifts[t] = float(metrics["precond_drift"])
+
+    trainer = build_chaos_trainer(
+        os.path.join(workdir, "spike"), steps=steps, async_precond=True,
+        # a huge clip ceiling lets the spike's magnitude reach the
+        # momentum (the drill targets the drift plane, not the clipper);
+        # threshold = matfn_tol * (slack-1) = 0.59 relative drift sits
+        # above the settled pre-spike regime, far below the spike's jump
+        drift_slack=60.0, grad_clip_norm=1e9,
+        inject=make_injector("spectrum_spike", at_step))
+    params, opt_state, losses = trainer.run(on_metrics=on_metrics)
+    tele = trainer.matfn_telemetry
+    finite = all(math.isfinite(l) for l in losses)
+    pre = max(drifts.get(at_step - 2, 0.0), drifts.get(at_step - 1, 0.0))
+    post = max(v for t, v in drifts.items() if t >= at_step)
+    jumped = post > 5.0 * max(pre, 1e-12)
+    redispatched = trainer.precond.last_dispatch is not None \
+        and trainer.precond.last_dispatch > at_step
+    ok = finite and jumped and redispatched \
+        and tele["drift_triggered"] >= 1 and tele["discarded"] == 0
+    return {"injection": "spectrum_spike", "at_step": at_step,
+            "drift_pre": pre, "drift_post": post,
+            "refresh_after_spike": redispatched,
+            "drift_triggered": tele["drift_triggered"],
+            "refreshes": tele["refreshes"], "losses_finite": finite,
+            "recovered": ok}
+
+
+def drill_ckpt_corrupt(workdir: str, steps: int = 6) -> dict:
+    """Bit rot in the newest checkpoint: restore must reject it via the
+    crc32 MANIFEST and fall back to the newest valid step."""
+    from repro.checkpoint import checkpoint as ckpt
+
+    d = os.path.join(workdir, "ckpt_corrupt")
+    trainer = build_chaos_trainer(d, steps=steps, checkpoint_every=2)
+    trainer.run()
+    complete = ckpt._complete_steps(d)
+    newest = complete[-1]
+    corrupt_checkpoint(d, newest)
+    rejected = not ckpt.verify_step(d, newest)
+    # a fresh trainer (the restart) must resume from the newest VALID step
+    trainer2 = build_chaos_trainer(d, steps=steps + 2, checkpoint_every=2)
+    params, opt_state, losses = trainer2.run()
+    resumed_from = (steps + 2) - len(losses)  # losses are post-resume
+    finite = bool(losses) and all(math.isfinite(l) for l in losses)
+    ok = bool(rejected and resumed_from < newest
+              and resumed_from in complete and finite)
+    return {"injection": "ckpt_corrupt", "corrupted_step": newest,
+            "manifest_rejected": rejected, "resumed_from": resumed_from,
+            "losses_finite": finite, "recovered": ok}
+
+
+# ----------------------------------------------------- subprocess drills
+
+def _drill_env():
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["REPRO_KERNEL_MODE"] = env.get("REPRO_KERNEL_MODE", "ref")
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in ("src", env.get("PYTHONPATH", "")) if p)
+    return env
+
+
+def _losses(stdout: str) -> dict:
+    out = {}
+    for line in stdout.splitlines():
+        if line.startswith("DRILL_LOSS "):
+            _, t, h = line.split()
+            out[int(t)] = h
+    return out
+
+
+def drill_sigkill(workdir: str, steps: int = 5,
+                  timeout_s: int = 560) -> dict:
+    """SIGKILL mid-step of the pipeline fault drill, then resume: the
+    relaunch must continue BITWISE against an uninterrupted reference
+    (sync preconditioners; compose of train/fault.py)."""
+    from repro.train.fault import Watchdog, latest_restart_point
+
+    def cmd(d):
+        return [sys.executable, "-m", "repro.train.fault",
+                "--ckpt_dir", d, "--steps", str(steps),
+                "--ckpt_every", "2"]
+
+    ref_dir = os.path.join(workdir, "sigkill_ref")
+    kill_dir = os.path.join(workdir, "sigkill")
+    ref = subprocess.run(cmd(ref_dir), env=_drill_env(),
+                         capture_output=True, text=True,
+                         timeout=timeout_s)
+    ref_losses = _losses(ref.stdout)
+    assert sorted(ref_losses) == list(range(steps)), \
+        ref.stdout + ref.stderr[-4000:]
+
+    proc = subprocess.Popen(cmd(kill_dir), env=_drill_env(),
+                            stdout=subprocess.PIPE,
+                            stderr=subprocess.STDOUT, text=True)
+    wd = Watchdog(os.path.join(kill_dir, "HEARTBEAT"))
+    deadline = time.time() + timeout_s
+    killed = False
+    while time.time() < deadline:
+        if proc.poll() is not None:
+            break
+        hb = wd.read()
+        if hb is not None and hb[0] >= 2 and \
+                (latest_restart_point(kill_dir) or 0) >= 2:
+            proc.send_signal(signal.SIGKILL)
+            proc.wait(timeout=30)
+            killed = True
+            break
+        time.sleep(0.2)
+    if not killed:
+        proc.kill()
+        raise AssertionError("drill never reached a killable checkpoint: "
+                             + proc.stdout.read())
+    resumed = subprocess.run(cmd(kill_dir), env=_drill_env(),
+                             capture_output=True, text=True,
+                             timeout=timeout_s)
+    post = _losses(resumed.stdout)
+    bitwise = bool(post) and all(h == ref_losses[t]
+                                 for t, h in post.items())
+    ok = bitwise and "resumed from step" in resumed.stdout \
+        and min(post) >= 2 and max(post) == steps - 1
+    return {"injection": "sigkill", "killed_after_step": wd.read()[0],
+            "resumed_steps": sorted(post), "bitwise": bitwise,
+            "recovered": ok}
+
+
+def drill_hang(workdir: str, at_step: int = 2, stale_after_s: float = 5.0,
+               timeout_s: int = 560) -> dict:
+    """Hang injection: the child's heartbeat stalls at step k; the
+    Watchdog must trip 'stale' so the drill aborts with a per-stage
+    diagnostic instead of waiting forever (the CI-hang failure mode)."""
+    from repro.train.fault import Watchdog, WatchdogConfig
+
+    d = os.path.join(workdir, "hang")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.train.chaos", "--child-hang",
+         "--workdir", d, "--at-step", str(at_step)],
+        env=_drill_env(), stdout=subprocess.PIPE,
+        stderr=subprocess.STDOUT, text=True)
+    hb_path = os.path.join(d, "HEARTBEAT")
+    wd = Watchdog(hb_path, WatchdogConfig(stale_after_s=stale_after_s))
+    deadline = time.time() + timeout_s
+    verdict = None
+    while time.time() < deadline:
+        if proc.poll() is not None:
+            verdict = "exited"
+            break
+        if wd.check() == "stale":
+            hb = wd.read()
+            if hb is not None and hb[0] >= at_step:
+                verdict = "stale"  # the injected hang, not a slow step
+                break
+        time.sleep(0.5)
+    # per-stage diagnostic: which stage last heartbeat, how long ago —
+    # on a real fleet this names the host to evict
+    now = time.time()
+    stages = {}
+    for s in range(2):
+        hb = Watchdog(f"{hb_path}.stage{s}").read()
+        stages[f"stage{s}"] = (None if hb is None
+                               else {"step": hb[0],
+                                     "age_s": round(now - hb[1], 1)})
+    proc.kill()
+    proc.wait(timeout=30)
+    ok = verdict == "stale" and all(
+        v is not None and v["step"] == at_step for v in stages.values())
+    return {"injection": "hang", "watchdog": verdict,
+            "stalled_at_step": at_step, "stages": stages,
+            "recovered": ok}
+
+
+def _child_hang(workdir: str, at_step: int):
+    """Child half of drill_hang: a pipeline fault-drill run whose host
+    loop stalls after step k (heartbeats stop; devices idle) — the
+    signature of a wedged collective / hung host."""
+    from repro.train.fault import build_pipeline_trainer
+
+    trainer, enter = build_pipeline_trainer(
+        ckpt_dir=workdir, steps=64, checkpoint_every=0)
+
+    def stall(t, metrics):
+        if t >= at_step:
+            time.sleep(1 << 20)
+
+    with enter():
+        trainer.run(on_metrics=stall)
+
+
+# ----------------------------------------------------------------- main
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--inject", default="all",
+                    choices=INJECTIONS + ("all",))
+    ap.add_argument("--workdir", default=None)
+    ap.add_argument("--at-step", type=int, default=None)
+    ap.add_argument("--child-hang", action="store_true",
+                    help=argparse.SUPPRESS)
+    args = ap.parse_args(argv)
+    workdir = args.workdir or tempfile.mkdtemp(prefix="repro_chaos_")
+
+    if args.child_hang:
+        _child_hang(workdir, args.at_step if args.at_step is not None
+                    else 2)
+        return
+
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    drills = {"nan_grad": drill_nan_grad,
+              "spectrum_spike": drill_spectrum_spike,
+              "ckpt_corrupt": drill_ckpt_corrupt,
+              "sigkill": drill_sigkill,
+              "hang": drill_hang}
+    names = INJECTIONS if args.inject == "all" else (args.inject,)
+    failed = []
+    for name in names:
+        kw = {}
+        if args.at_step is not None and name not in ("ckpt_corrupt",
+                                                     "sigkill"):
+            kw["at_step"] = args.at_step
+        report = drills[name](workdir, **kw)
+        print("CHAOS_REPORT " + json.dumps(report), flush=True)
+        if not report["recovered"]:
+            failed.append(name)
+    if failed:
+        print(f"CHAOS_FAILED {failed}", flush=True)
+        raise SystemExit(1)
+    print("CHAOS_OK", flush=True)
+
+
+if __name__ == "__main__":
+    main()

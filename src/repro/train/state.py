@@ -23,13 +23,19 @@ def master_params(params):
 
 
 def make_train_step(model: Model, opt: base.Optimizer,
-                    ocfg: OptimizerConfig) -> Callable:
+                    ocfg: OptimizerConfig, inject=None) -> Callable:
     """Build train_step(params, opt_state, batch, step, refresh=None).
 
     ``refresh`` is the preconditioner staleness override (base.Optimizer):
     jit it as a STATIC argument (static_argnums=(4,)) so a Python bool
     compiles separate refresh/skip variants — the skip variant contains
     zero matrix-function work.  None keeps the dynamic in-state schedule.
+
+    ``inject``: optional traced gradient hook ``f(grads, step) -> grads``
+    applied BEFORE clipping — the §15 chaos drill's deterministic fault
+    injector (train/chaos.py).  Must be pure jax (e.g. a ``jnp.where``
+    on the step counter) so the step compiles once and the injection
+    fires data-dependently at the target step; None is a no-op.
     """
     cast_tree = model.param_dtypes()
 
@@ -49,6 +55,8 @@ def make_train_step(model: Model, opt: base.Optimizer,
 
             (loss, metrics), grads = jax.value_and_grad(
                 loss_fn, has_aux=True)(params)
+        if inject is not None:
+            grads = inject(grads, step)
         grads, gnorm = base.clip_by_global_norm(grads, ocfg.grad_clip_norm)
         if ocfg.gradient_compression == "int8":
             grads = compression.int8_roundtrip(grads)
@@ -163,8 +171,9 @@ def pipeline_loss_and_grads(model: Model, mesh, n_micro: int,
 
 def make_pipeline_train_step(model: Model, opt: base.Optimizer,
                              ocfg: OptimizerConfig, mesh, n_micro: int,
-                             axis: str = "pod") -> Callable:
-    """1F1B variant of make_train_step (same signature/jit contract).
+                             axis: str = "pod", inject=None) -> Callable:
+    """1F1B variant of make_train_step (same signature/jit contract,
+    including the ``inject`` chaos hook).
 
     Gradients come out of the pipeline engine in fp32 (differentiated
     wrt the fp32 masters), so ``grads_dtype="bfloat16"`` — a data-
@@ -176,6 +185,8 @@ def make_pipeline_train_step(model: Model, opt: base.Optimizer,
 
     def train_step(params, opt_state, batch, step, refresh=None):
         loss, grads, metrics = loss_and_grads(params, batch)
+        if inject is not None:
+            grads = inject(grads, step)
         grads, gnorm = base.clip_by_global_norm(grads, ocfg.grad_clip_norm)
         if ocfg.gradient_compression == "int8":
             grads = compression.int8_roundtrip(grads)

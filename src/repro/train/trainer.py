@@ -36,7 +36,8 @@ from repro.train.state import (make_pipeline_train_step, make_train_step,
 class Trainer:
     def __init__(self, model: Model, ocfg: OptimizerConfig,
                  tcfg: TrainConfig, dcfg: DataConfig,
-                 mesh=None, shardings: Optional[Dict[str, Any]] = None):
+                 mesh=None, shardings: Optional[Dict[str, Any]] = None,
+                 inject=None):
         self.model = model
         self.ocfg, self.tcfg, self.dcfg = ocfg, tcfg, dcfg
         self.mesh = mesh
@@ -52,9 +53,10 @@ class Trainer:
             assert mesh.shape["pod"] == tcfg.pipeline_stages, \
                 (mesh.shape, tcfg.pipeline_stages)
             step_fn = make_pipeline_train_step(model, self.opt, ocfg,
-                                               mesh, tcfg.n_micro)
+                                               mesh, tcfg.n_micro,
+                                               inject=inject)
         else:
-            step_fn = make_train_step(model, self.opt, ocfg)
+            step_fn = make_train_step(model, self.opt, ocfg, inject=inject)
         # the unjitted step stays reachable for trace-only observability
         # (benchmarks count its Pallas launches via ops.count_launches)
         self.raw_step_fn = step_fn

@@ -326,7 +326,7 @@ def test_polar_bucketed_with_iters(key):
     views = [jax.random.normal(jax.random.fold_in(key, i), s)
              for i, s in enumerate([(48, 32), (48, 32), (2, 64, 64)])]
     ocfg = OptimizerConfig(prism=_cfg(2e-2), matfn_tol=2e-2)
-    outs, iters = bucketing.polar_bucketed(views, ocfg, key,
+    outs, iters, statuses = bucketing.polar_bucketed(views, ocfg, key,
                                            with_iters=True)
     assert [i.shape for i in iters] == [(), (), (2,)]
     for v, o, it in zip(views, outs, iters):
@@ -342,7 +342,7 @@ def test_polar_bucketed_padded_adaptive(key):
              for i, s in enumerate([(64, 64), (64, 56)])]
     ocfg = OptimizerConfig(prism=_cfg(2e-2, iters=16, warm=2),
                            matfn_tol=2e-2, bucket_pad=True)
-    outs, iters = bucketing.polar_bucketed(views, ocfg, key,
+    outs, iters, statuses = bucketing.polar_bucketed(views, ocfg, key,
                                            with_iters=True)
     for v, o, it in zip(views, outs, iters):
         ref = matfn.polar(v, method="svd")

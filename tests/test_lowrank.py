@@ -155,7 +155,7 @@ def test_bucketed_engine_routes_lowrank(key):
     cfg = _ocfg(lowrank_rank=4, lowrank_oversample=4, lowrank_max_dim=64)
     views = [_rank_l_matrix(key, 96, 24, 8),            # aspect 4: lowrank
              jax.random.normal(jax.random.fold_in(key, 9), (24, 24))]
-    outs, iters = bucketing.polar_bucketed(views, cfg, key,
+    outs, iters, statuses = bucketing.polar_bucketed(views, cfg, key,
                                            with_iters=True)
     direct = lowrank.polar_lowrank(
         views[0], 4, 4, cfg=cfg.resolved_prism,
