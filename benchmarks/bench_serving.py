@@ -1,0 +1,175 @@
+"""Serving engine: continuous vs static batching under offered load (§16).
+
+Drives the slot-table engine (serving/engine.py) with seeded Poisson
+traces (serving/loadgen.py) at ≥3 offered-QPS points per arch and
+records p50/p99 full-request latency, throughput, and the slot-occupancy
+trajectory.  Latency/throughput numbers run on the VIRTUAL clock (every
+decode launch costs ``STEP_DT_MS``, every prefill launch the same) so
+the committed baseline is deterministic and hardware-independent — the
+real per-step wall cost on this container's CPU is reported alongside
+for honesty.
+
+Two schema-enforced contracts ride in the baseline:
+  * continuous admission strictly out-runs static (admit only when the
+    table has drained) batching in tokens/s on the same mixed-length
+    trace — the reason the engine exists;
+  * the decode step compiles at most 2 distinct shapes across a whole
+    run (in practice exactly 1 — the slot table never changes shape).
+
+Writes BENCH_serving.json on full runs; smoke emits the CSV subset only.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, pick, smoke, time_call
+from repro.configs import get_smoke_config
+from repro.models import build
+from repro.serving import Engine, EngineConfig, make_trace
+
+OUT = os.path.join(os.path.dirname(os.path.dirname(__file__)),
+                   "BENCH_serving.json")
+
+ARCHS = ["qwen3-14b", "mixtral-8x7b"]
+SMOKE_ARCHS = ["qwen3-14b"]
+QPS_POINTS = [10.0, 20.0, 40.0]
+SMOKE_QPS = [20.0, 40.0]
+SAT_QPS = 200.0   # backlogged regime for the continuous-vs-static contract
+SLOTS = 4
+CACHE_LEN = 64
+STEP_DT_MS = 10.0
+N_REQ = 24
+SMOKE_N_REQ = 8
+PROMPT_LENS = (3, 5, 8, 12)
+GEN_LENS = (2, 4, 8)
+
+
+def _run_engine(model, params, trace, admission: str):
+    eng = Engine(model, params, EngineConfig(
+        slots=SLOTS, cache_len=CACHE_LEN, greedy=True, eos_id=0,
+        admission=admission))
+    res = eng.run(trace, step_dt=STEP_DT_MS / 1e3)
+    return res
+
+
+def _bench_arch(arch: str, qps_points, n_req: int) -> dict:
+    cfg = get_smoke_config(arch)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    points = []
+    decode_shapes = 0
+    prefill_launches = 0
+    for qps in qps_points:
+        trace = make_trace(0, n_requests=n_req, qps=qps,
+                           vocab_size=cfg.vocab_size,
+                           prompt_lens=PROMPT_LENS, gen_lens=GEN_LENS)
+        res = _run_engine(model, params, trace, "continuous")
+        lat = res.latency_percentiles()
+        occ = np.asarray(res.occupancy, np.float64)
+        decode_shapes = max(decode_shapes, res.decode_step_shapes)
+        prefill_launches += res.n_prefill_launches
+        points.append({
+            "qps": qps,
+            "completed": len(res.completions),
+            "p50_s": lat["p50"],
+            "p99_s": lat["p99"],
+            "tokens_per_s": res.tokens_per_s,
+            "decode_steps": res.n_decode_steps,
+            "occupancy_mean": float(occ.mean()),
+            "occupancy_max": int(occ.max()),
+            # first 32 steps of the trajectory: enough to see the table
+            # fill/drain shape without bloating the baseline
+            "occupancy_traj": [int(o) for o in res.occupancy[:32]],
+        })
+        emit(f"serving_{arch}_qps{qps:g}", lat["p50"] * 1e6,
+             p99_s=round(lat["p99"], 4),
+             tok_s=round(res.tokens_per_s, 1),
+             occ_mean=round(float(occ.mean()), 2))
+
+    # throughput invariant: same mixed trace, both admission policies,
+    # at SATURATING load (arrivals outpace service) — below saturation
+    # throughput is arrival-bound and the policies trivially tie; the
+    # engine's reason to exist is the backlogged regime, where static
+    # admission convoys on the longest request in each drained batch
+    sat = SAT_QPS
+    trace = make_trace(0, n_requests=n_req, qps=sat,
+                       vocab_size=cfg.vocab_size,
+                       prompt_lens=PROMPT_LENS, gen_lens=GEN_LENS)
+    cont = _run_engine(model, params, trace, "continuous")
+    stat = _run_engine(model, params, trace, "static")
+    emit(f"serving_{arch}_cont_vs_static", 0.0,
+         cont_tok_s=round(cont.tokens_per_s, 1),
+         static_tok_s=round(stat.tokens_per_s, 1),
+         cont_steps=cont.n_decode_steps, static_steps=stat.n_decode_steps)
+
+    # honest wall cost of one slot-table decode launch on this backend
+    eng = Engine(model, params, EngineConfig(slots=SLOTS,
+                                             cache_len=CACHE_LEN))
+
+    def _timed():
+        # the decode step donates its cache: thread it through so every
+        # timed call hands in a live buffer
+        nxt, eng.cache = eng._decode(
+            eng.params, eng.cache,
+            jnp.zeros((SLOTS, 1), jnp.int32),
+            jnp.zeros((SLOTS, 1), jnp.int32),
+            jnp.ones((SLOTS,), bool),
+            jax.random.PRNGKey(0),
+            jnp.zeros((SLOTS,), jnp.int32))
+        return nxt
+
+    step_ms = time_call(_timed) * 1e3
+
+    return {
+        "arch": cfg.name,
+        "family": cfg.family,
+        "slots": SLOTS,
+        "cache_len": CACHE_LEN,
+        "n_requests": n_req,
+        "step_dt_ms": STEP_DT_MS,
+        "decode_step_shapes": decode_shapes,
+        "prefill_launches": prefill_launches,
+        "qps_points": points,
+        "sat_qps": SAT_QPS,
+        "continuous_tokens_per_s": cont.tokens_per_s,
+        "static_tokens_per_s": stat.tokens_per_s,
+        "decode_ms_per_step_wall": step_ms,
+    }
+
+
+def run(write_json: bool = True) -> None:
+    rows = [_bench_arch(a, pick(QPS_POINTS, SMOKE_QPS),
+                        pick(N_REQ, SMOKE_N_REQ))
+            for a in pick(ARCHS, SMOKE_ARCHS)]
+    if not (write_json and not smoke()):
+        return
+    doc = {
+        "benchmark": "serving",
+        "backend": jax.default_backend(),
+        "step_dt_ms": STEP_DT_MS,
+        "notes": [
+            "latency/throughput on the deterministic virtual clock "
+            "(one launch = step_dt_ms); decode_ms_per_step_wall is the "
+            "jit-warmed real cost of one slot-table launch on this "
+            "container's CPU",
+            "continuous_tokens_per_s > static_tokens_per_s is the §16 "
+            "engine contract on a mixed-length seeded trace "
+            "(schema-enforced)",
+            "decode_step_shapes <= 2 is the jit-cache contract: the "
+            "slot table never changes shape (schema-enforced)",
+        ],
+        "results": rows,
+    }
+    with open(OUT, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"# wrote {OUT}", flush=True)
+
+
+if __name__ == "__main__":
+    run()

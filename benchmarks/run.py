@@ -29,10 +29,11 @@ def main() -> None:
 
     from benchmarks import (bench_async_precond, bench_batched_matfn,
                             bench_lowrank, bench_pipeline_train,
-                            bench_robustness, bench_sharded_precond,
-                            fig1_sigma_sweep, fig3_gaussian, fig4_htmp,
-                            fig5_shampoo, fig6_muon_lm, figd3_sqrt,
-                            figd5_newton, roofline_table)
+                            bench_robustness, bench_serving,
+                            bench_sharded_precond, fig1_sigma_sweep,
+                            fig3_gaussian, fig4_htmp, fig5_shampoo,
+                            fig6_muon_lm, figd3_sqrt, figd5_newton,
+                            roofline_table)
 
     print("name,us_per_call,derived")
     t0 = time.time()
@@ -40,7 +41,7 @@ def main() -> None:
                 figd5_newton, fig5_shampoo, fig6_muon_lm, roofline_table,
                 bench_batched_matfn, bench_sharded_precond,
                 bench_async_precond, bench_pipeline_train,
-                bench_lowrank, bench_robustness]:
+                bench_lowrank, bench_robustness, bench_serving]:
         name = mod.__name__.split(".")[-1]
         print(f"# --- {name} ---", flush=True)
         try:

@@ -572,12 +572,111 @@ def validate_robustness(doc: dict, name: str):
     return errs
 
 
+SERVING_TOP = {
+    "benchmark": lambda x: x == "serving",
+    "backend": lambda x: isinstance(x, str) and x,
+    "step_dt_ms": lambda x: _is_num(x) and x > 0,
+    "notes": _str_list,
+    # ≥2 archs: the engine must be proven beyond one attention flavor
+    "results": lambda x: isinstance(x, list) and len(x) >= 2,
+}
+
+SERVING_ROW = {
+    "arch": lambda x: isinstance(x, str) and x,
+    "family": lambda x: x in ("dense", "moe"),
+    "slots": _pos_int,
+    "cache_len": _pos_int,
+    "n_requests": _pos_int,
+    "step_dt_ms": lambda x: _is_num(x) and x > 0,
+    "decode_step_shapes": _pos_int,
+    "prefill_launches": _pos_int,
+    "qps_points": lambda x: isinstance(x, list) and len(x) >= 3,
+    "sat_qps": lambda x: _is_num(x) and x > 0,
+    "continuous_tokens_per_s": lambda x: _is_num(x) and x > 0,
+    "static_tokens_per_s": lambda x: _is_num(x) and x > 0,
+    "decode_ms_per_step_wall": _nonneg,
+}
+
+SERVING_POINT = {
+    "qps": lambda x: _is_num(x) and x > 0,
+    "completed": _pos_int,
+    "p50_s": _nonneg,
+    "p99_s": _nonneg,
+    "tokens_per_s": lambda x: _is_num(x) and x > 0,
+    "decode_steps": _pos_int,
+    "occupancy_mean": lambda x: _is_num(x) and x >= 1,
+    "occupancy_max": _pos_int,
+    "occupancy_traj": lambda x: isinstance(x, list) and x
+    and all(isinstance(o, int) and o >= 1 for o in x),
+}
+
+
+def validate_serving(doc: dict, name: str):
+    errs = []
+    for field, ok in SERVING_TOP.items():
+        if field not in doc:
+            errs.append(f"{name}: missing top-level field {field!r}")
+        elif not ok(doc[field]):
+            errs.append(f"{name}: bad top-level {field}={doc[field]!r}")
+    for i, row in enumerate(doc.get("results") or []):
+        where = f"{name}: results[{i}]"
+        if not isinstance(row, dict):
+            errs.append(f"{where} is not an object")
+            continue
+        row_errs = []
+        for field, ok in SERVING_ROW.items():
+            if field not in row:
+                row_errs.append(f"{where}: missing field {field!r}")
+            elif not ok(row[field]):
+                row_errs.append(f"{where}: bad value "
+                                f"{field}={row[field]!r}")
+        errs.extend(row_errs)
+        if row_errs:
+            continue
+        # §16 jit-cache contract: the slot table never changes shape, so
+        # the decode step compiles at most 2 shapes across a whole run
+        if row["decode_step_shapes"] > 2:
+            errs.append(f"{where}: decode step compiled "
+                        f"{row['decode_step_shapes']} shapes (> 2)")
+        # §16 engine contract: on a mixed-length seeded trace at
+        # saturating load, continuous admission strictly out-runs
+        # static (admit-only-when-drained) batching
+        if not row["continuous_tokens_per_s"] > row["static_tokens_per_s"]:
+            errs.append(
+                f"{where}: continuous batching does not beat static "
+                f"({row['continuous_tokens_per_s']} vs "
+                f"{row['static_tokens_per_s']} tok/s)")
+        for j, pt in enumerate(row["qps_points"]):
+            pw = f"{where}: qps_points[{j}]"
+            pt_errs = []
+            for field, ok in SERVING_POINT.items():
+                if field not in pt:
+                    pt_errs.append(f"{pw}: missing field {field!r}")
+                elif not ok(pt[field]):
+                    pt_errs.append(f"{pw}: bad value "
+                                   f"{field}={pt[field]!r}")
+            errs.extend(pt_errs)
+            if pt_errs:
+                continue
+            if pt["p50_s"] > pt["p99_s"]:
+                errs.append(f"{pw}: p50 {pt['p50_s']} > p99 "
+                            f"{pt['p99_s']}")
+            if pt["completed"] != row["n_requests"]:
+                errs.append(f"{pw}: completed {pt['completed']} != "
+                            f"offered {row['n_requests']}")
+            if pt["occupancy_max"] > row["slots"]:
+                errs.append(f"{pw}: occupancy {pt['occupancy_max']} "
+                            f"exceeds the slot table ({row['slots']})")
+    return errs
+
+
 VALIDATORS = {
     "BENCH_batched_matfn.json": validate_batched_matfn,
     "BENCH_async_precond.json": validate_async_precond,
     "BENCH_pipeline_train.json": validate_pipeline_train,
     "BENCH_lowrank.json": validate_lowrank,
     "BENCH_robustness.json": validate_robustness,
+    "BENCH_serving.json": validate_serving,
 }
 
 

@@ -1,4 +1,5 @@
-from repro.checkpoint.checkpoint import (latest_step, restore, save,
-                                         verify_step)
+from repro.checkpoint.checkpoint import (latest_step, restore,
+                                         restore_params, save, verify_step)
 
-__all__ = ["latest_step", "restore", "save", "verify_step"]
+__all__ = ["latest_step", "restore", "restore_params", "save",
+           "verify_step"]

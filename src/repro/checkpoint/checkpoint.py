@@ -188,3 +188,23 @@ def restore(ckpt_dir: str, target: Any, step: Optional[int] = None,
                    else jax.numpy.asarray(arr))
     return step, jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(target), out)
+
+
+def restore_params(ckpt_dir: str, target_params: Any,
+                   step: Optional[int] = None,
+                   shardings: Any = None) -> tuple[int, Any]:
+    """Train→serve handoff (DESIGN.md §16): restore ONLY the model
+    params out of a full training checkpoint (a ``{"params", "opt"}``
+    tree as written by train/state.py) — the optimizer half is never
+    read, so serving restarts don't pay for preconditioner state.
+
+    ``target_params`` is the serving model's param tree (arrays or
+    ShapeDtypeStructs, e.g. ``model.param_shapes()``); ``shardings`` an
+    optional matching tree for elastic re-shard onto the serving mesh.
+    Inherits all §15 integrity semantics from ``restore``: a corrupt
+    newest step falls back to the newest step that verifies.
+    """
+    sh = None if shardings is None else {"params": shardings}
+    step, tree = restore(ckpt_dir, {"params": target_params}, step=step,
+                         shardings=sh)
+    return step, tree["params"]

@@ -177,7 +177,8 @@ def attend(params, x, positions, cfg: ModelConfig, window: int | None = None,
 
 
 def decode_attend(params, x, position, cache_k, cache_v, cache_pos, slot,
-                  cfg: ModelConfig, window: int | None = None):
+                  cfg: ModelConfig, window: int | None = None,
+                  active: Optional[jax.Array] = None):
     """One-token decode: x [B, 1, D], cache_k/v [B, Sc, KV, Hd].
 
     cache_pos [B, Sc] holds the absolute position of each cache slot
@@ -190,6 +191,13 @@ def decode_attend(params, x, position, cache_k, cache_v, cache_pos, slot,
     the in-place write touches one shard and attention runs flash-decode
     style with the softmax reducing over the sharded seq axis.
 
+    ``active`` [B] bool (serving slot mask, DESIGN.md §16): lanes with
+    active=False keep their cache rows bitwise-frozen — a retired slot
+    in a continuous-batching step never scribbles its KV state, so its
+    cache stays exactly what its request left behind until the slot is
+    re-admitted.  None means every lane is live (the training-era path,
+    bit-identical to pre-§16 behavior).
+
     Returns (out [B, 1, D], new cache_k, new cache_v).
     """
     q, k, v = _project_qkv(params, x, position, cfg)
@@ -197,8 +205,13 @@ def decode_attend(params, x, position, cache_k, cache_v, cache_pos, slot,
     B, _, H, Hd = q.shape
     KV = k.shape[2]
     groups = H // KV
+    old_k, old_v = cache_k, cache_v
     cache_k = jax.vmap(lambda c, s, kn: c.at[s].set(kn[0]))(cache_k, slot, k)
     cache_v = jax.vmap(lambda c, s, vn: c.at[s].set(vn[0]))(cache_v, slot, v)
+    if active is not None:
+        gate = active.reshape(B, 1, 1, 1)
+        cache_k = jnp.where(gate, cache_k, old_k)
+        cache_v = jnp.where(gate, cache_v, old_v)
     keys = shard_activation(cache_k, ("batch", "kv_seq", None, None))
     vals = shard_activation(cache_v, ("batch", "kv_seq", None, None))
     scale = jnp.asarray(1.0 / np.sqrt(Hd), q.dtype)

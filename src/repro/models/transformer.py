@@ -71,15 +71,18 @@ def _block_axes(cfg: ModelConfig):
 
 
 def _apply_block(p, x, positions, cfg: ModelConfig):
-    h, _ = attn.attend(p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps),
-                       positions, cfg)
+    """One decoder layer -> (x, aux, (k, v)).  The per-layer (k, v) are
+    what ``attend`` already projects; serving prefill (§16) stacks them
+    into the decode cache, the train/loss path discards them."""
+    h, kv = attn.attend(p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps),
+                        positions, cfg)
     x = x + h
     xin = L.rms_norm(x, p["ln2"], cfg.norm_eps)
     if cfg.family in ("moe",):
         h, aux = moe_lib.moe_ffn(p["moe"], xin, cfg)
     else:
         h, aux = L.mlp(p["mlp"], xin, cfg), 0.0
-    return x + h, aux
+    return x + h, aux, kv
 
 
 def _init_mamba_layer(key, cfg: ModelConfig):
@@ -141,6 +144,21 @@ def _stacked_init(init_fn, key, n: int):
 def _add_layer_axis(axes_tree):
     return jax.tree.map(lambda t: ("layers",) + tuple(t), axes_tree,
                         is_leaf=lambda t: isinstance(t, tuple))
+
+
+def _gate_cache(new, old, active, batch_axis: int):
+    """Per-lane cache freeze (§16): where ``active`` [B] is False the
+    OLD leaf value survives bitwise.  Works on a pytree whose every leaf
+    carries the batch dim at ``batch_axis``; active=None is a no-op."""
+    if active is None:
+        return new
+
+    def gate(n, o):
+        shape = [1] * n.ndim
+        shape[batch_axis] = -1
+        return jnp.where(active.reshape(shape), n, o)
+
+    return jax.tree.map(gate, new, old)
 
 
 class Model:
@@ -315,11 +333,24 @@ class Model:
             return x, 0.0
 
         def body(carry, p):
-            h, aux = _apply_block(p, carry, positions, cfg)
+            h, aux, _ = _apply_block(p, carry, positions, cfg)
             return h, aux
         body = jax.checkpoint(body) if remat else body
         x, auxs = jax.lax.scan(body, x, params["layers"])
         return x, jnp.sum(auxs)
+
+    def _backbone_kv(self, params, x, positions):
+        """Dense/moe/vlm/audio backbone that also stacks each layer's
+        projected (k, v) — [L, B, S, KV, Hd] — for the §16 serving
+        prefill.  No remat: prefill is forward-only."""
+        cfg = self.cfg
+
+        def body(carry, p):
+            h, aux, (k, v) = _apply_block(p, carry, positions, cfg)
+            return h, (aux, k, v)
+
+        x, (auxs, ks, vs) = jax.lax.scan(body, x, params["layers"])
+        return x, ks, vs
 
     def forward(self, params, batch) -> jax.Array:
         """Full-sequence logits (train / prefill)."""
@@ -481,11 +512,126 @@ class Model:
             "kpos": jnp.full((batch, clen), INT_SENTINEL, jnp.int32),
         }
 
-    def decode_step(self, params, cache, tokens, pos):
+    def prefill_cache(self, params, batch, cache_len: int, lengths=None):
+        """ONE-launch serving prefill (DESIGN.md §16): run the whole
+        (right-padded) prompt through the backbone once, returning
+        ``(last-real-token logits, populated decode cache)`` — the cache
+        has the structure of ``init_cache(B, cache_len)`` and is ready
+        for ``decode_step`` at ``pos = length``.
+
+        ``lengths`` [B] int32 gives each lane's true prompt length
+        (None = every token of the padded batch is real).  Ragged lanes
+        are exact: pad positions never enter the cache (their ``kpos``
+        stays the sentinel, so causal masking excludes them — and with a
+        rolling window each lane keeps its OWN last ``cache_len`` real
+        positions, not the padded batch's), and the returned logits are
+        gathered at ``lengths - 1`` per lane.
+
+        dense/moe/vlm/audio run the parallel flash-prefill backbone with
+        the per-layer (k, v) stacked straight into the cache — one
+        compiled program for the whole prompt instead of ``prompt_len``
+        decode launches.  ssm/hybrid (recurrences, not KV tables) fall
+        back to one compiled ``lax.scan`` of ``decode_step`` over the
+        prompt: still a single launch, bitwise-identical to the streamed
+        decode loop it replaces.
+
+        Parity contract: matches a streamed decode loop iff the rolling
+        cache never discards a position still inside the attention
+        window — i.e. ``cache_len >= prompt_len`` for full attention
+        (SWA archs clamp to their window via ``cache_len()``, which is
+        lossless).  A smaller cache is a *different* (truncated-context)
+        model in both paths and they diverge; the serving engine always
+        sizes ``cache_len = prompt_pad + max_gen``.
+        """
+        cfg = self.cfg
+        if cfg.family in ("ssm", "hybrid"):
+            return self._prefill_scan(params, batch, cache_len, lengths)
+        tokens = batch["tokens"]
+        x = self._embed_tokens(params, tokens)
+        B = x.shape[0]
+        if cfg.family == "vlm":
+            assert lengths is None, \
+                "ragged prompts are not supported for vlm prefill"
+            px = batch["patches"].astype(x.dtype) @ params["vision_proj"]
+            x = jnp.concatenate([px.astype(x.dtype), x], axis=1)
+        S = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x, ks, vs = self._backbone_kv(params, x, positions)
+
+        # slot-centric scatter: slot s of lane b holds that lane's newest
+        # real position p ≡ s (mod clen), exactly what a streamed decode
+        # loop would have left behind (rolling writes at pos % clen)
+        clen = self.cache_len(cache_len)
+        L_real = jnp.full((B,), S, jnp.int32) if lengths is None \
+            else lengths.astype(jnp.int32)
+        s_idx = jnp.arange(clen, dtype=jnp.int32)
+        q = (L_real[:, None] - 1 - s_idx[None, :]) // clen  # [B, clen]
+        win = s_idx[None, :] + clen * q
+        has = win >= 0
+        src = jnp.clip(win, 0, S - 1)
+        gather_idx = src[None, :, :, None, None]
+        mask5 = has[None, :, :, None, None]
+        new_k = jnp.where(mask5, jnp.take_along_axis(ks, gather_idx, axis=2),
+                          0).astype(jnp.dtype(cfg.dtype))
+        new_v = jnp.where(mask5, jnp.take_along_axis(vs, gather_idx, axis=2),
+                          0).astype(jnp.dtype(cfg.dtype))
+        kpos = jnp.where(has, win, INT_SENTINEL).astype(jnp.int32)
+
+        if lengths is None:
+            x_last = x[:, -1:]
+        else:
+            idx = (L_real - 1).reshape(B, 1, 1)
+            x_last = jnp.take_along_axis(x, idx, axis=1)
+        return self._lm_logits(params, x_last), \
+            {"k": new_k, "v": new_v, "kpos": kpos}
+
+    def _prefill_scan(self, params, batch, cache_len: int, lengths=None):
+        """Prefill fallback for recurrent-state families: one compiled
+        scan of decode_step over the prompt, active-masked past each
+        lane's true length so pad steps freeze the state bitwise."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape[0], tokens.shape[-1]
+        cache = self.init_cache(B, cache_len)
+        V = self.padded_vocab
+        shape = (B, cfg.num_codebooks, 1, V) if cfg.family == "audio" \
+            else (B, 1, V)
+        last0 = jnp.zeros(shape, jnp.float32)
+        L_real = None if lengths is None else lengths.astype(jnp.int32)
+
+        def body(carry, t):
+            cache, last = carry
+            tok = jax.lax.dynamic_slice_in_dim(tokens, t, 1, axis=-1)
+            pos = jnp.full((B, 1), t, jnp.int32)
+            act = None if L_real is None else (t < L_real)
+            logits, cache = self.decode_step(params, cache, tok, pos,
+                                             active=act)
+            if L_real is None:
+                last = jnp.where(t == S - 1, logits, last)
+            else:
+                cond = (t == L_real - 1).reshape(
+                    (B,) + (1,) * (logits.ndim - 1))
+                last = jnp.where(cond, logits, last)
+            return (cache, last), None
+
+        (cache, last), _ = jax.lax.scan(body, (cache, last0),
+                                        jnp.arange(S, dtype=jnp.int32))
+        return last, cache
+
+    def decode_step(self, params, cache, tokens, pos, active=None):
         """tokens [B, 1] ([B, K, 1] audio); pos [B, 1] absolute position.
 
         Returns (logits for the new token, updated cache).  Rolling caches
         write at slot pos % window.
+
+        ``active`` [B] bool is the serving slot mask (DESIGN.md §16):
+        inactive lanes run as dead compute in the fixed-capacity batch
+        but leave EVERY cache leaf bitwise-frozen — KV rows, kpos, SSM /
+        RG-LRU state — so a retired or not-yet-admitted slot can never
+        scribble state that a later request would observe.  Their logits
+        are garbage by construction; callers (serving/engine.py) mask
+        them at the sampling layer.  active=None is the pre-§16
+        every-lane-live path, bit-identical to before.
         """
         cfg = self.cfg
         x = self._embed_tokens(params, tokens)  # audio sums codebooks
@@ -498,22 +644,25 @@ class Model:
                 return h + y, c2
             x, new_ssm = jax.lax.scan(body, x,
                                       (params["layers"], cache["ssm"]))
-            return self._lm_logits(params, x), {"ssm": new_ssm}
+            new_cache = {"ssm": _gate_cache(new_ssm, cache["ssm"], active,
+                                            batch_axis=1)}
+            return self._lm_logits(params, x), new_cache
 
         if cfg.family == "hybrid":
-            return self._decode_hybrid(params, cache, x, pos)
+            return self._decode_hybrid(params, cache, x, pos, active)
 
         clen = cache["k"].shape[2]
         slot = (pos[:, 0] % clen).astype(jnp.int32)  # [B]
         new_kpos = jax.vmap(
             lambda kp, s, p: kp.at[s].set(p))(cache["kpos"], slot, pos[:, 0])
+        new_kpos = _gate_cache(new_kpos, cache["kpos"], active, batch_axis=0)
 
         def body(carry, inp):
             h = carry
             p, ck, cv = inp
             y, ck, cv = attn.decode_attend(
                 p["attn"], L.rms_norm(h, p["ln1"], cfg.norm_eps), pos,
-                ck, cv, new_kpos, slot, cfg)
+                ck, cv, new_kpos, slot, cfg, active=active)
             h = h + y
             hin = L.rms_norm(h, p["ln2"], cfg.norm_eps)
             if cfg.family == "moe":
@@ -528,12 +677,13 @@ class Model:
         logits = self._lm_logits(params, x)
         return logits, {"k": new_k, "v": new_v, "kpos": new_kpos}
 
-    def _decode_hybrid(self, params, cache, x, pos):
+    def _decode_hybrid(self, params, cache, x, pos, active=None):
         cfg = self.cfg
         clen = cache["k"].shape[3]
         slot = (pos[:, 0] % clen).astype(jnp.int32)
         new_kpos = jax.vmap(
             lambda kp, s, p: kp.at[s].set(p))(cache["kpos"], slot, pos[:, 0])
+        new_kpos = _gate_cache(new_kpos, cache["kpos"], active, batch_axis=0)
 
         def body(carry, inp):
             h = carry
@@ -554,7 +704,7 @@ class Model:
                     y, ck_new, cv_new = attn.decode_attend(
                         pi["attn"], L.rms_norm(h, pi["ln1"], cfg.norm_eps),
                         pos, ck[ai], cv[ai], new_kpos, slot, cfg,
-                        window=cfg.rglru.attention_window)
+                        window=cfg.rglru.attention_window, active=active)
                     ck = ck.at[ai].set(ck_new)
                     cv = cv.at[ai].set(cv_new)
                     ai += 1
@@ -566,6 +716,7 @@ class Model:
         x, (new_rec, new_k, new_v) = jax.lax.scan(
             body, x, (params["layers"], cache["rec"], cache["k"],
                       cache["v"]))
+        new_rec = _gate_cache(new_rec, cache["rec"], active, batch_axis=1)
         new_cache = {"rec": new_rec, "k": new_k, "v": new_v,
                      "kpos": new_kpos}
         ti = 0
@@ -576,7 +727,8 @@ class Model:
                 y, c2 = rglru_lib.rglru_decode_step(
                     p["rglru"], L.rms_norm(x, p["ln1"], cfg.norm_eps),
                     cache["tail"][ti], cfg)
-                new_tail.append(c2)
+                new_tail.append(_gate_cache(c2, cache["tail"][ti], active,
+                                            batch_axis=0))
                 ti += 1
                 x = x + y
                 x = x + L.mlp(p["mlp"],

@@ -1,3 +1,11 @@
-from repro.serving.decode import make_prefill_step, make_serve_step
+from repro.serving.decode import (make_prefill_step, make_serve_step,
+                                  sample_logits)
+from repro.serving.engine import (Completion, Engine, EngineConfig,
+                                  RunResult, pow2_pad)
+from repro.serving.loadgen import Request, make_trace
 
-__all__ = ["make_prefill_step", "make_serve_step"]
+__all__ = [
+    "Completion", "Engine", "EngineConfig", "Request", "RunResult",
+    "make_prefill_step", "make_serve_step", "make_trace", "pow2_pad",
+    "sample_logits",
+]

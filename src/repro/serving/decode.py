@@ -5,10 +5,13 @@ Two decode policies share one step shape:
   greedy=True   serve_step(params, cache, tokens, pos)
                 -> (logits, argmax token, cache); fully deterministic,
                 the launch/serve.py and examples/serve_lm.py loop.
-  greedy=False  serve_step(params, cache, tokens, pos, key)
+  greedy=False  serve_step(params, cache, tokens, pos, key, rids=None)
                 -> (logits, sampled token, cache); temperature / top-k
-                sampling, the caller threads a PRNG key per step
-                (fold_in on the position keeps replays reproducible).
+                sampling.  The caller threads ONE base PRNG key; each
+                lane folds (request id, position) into it, so replays
+                are reproducible and two requests decoding at the same
+                position never share a sample stream (rids=None keys
+                by position alone, backward compatible).
 
 ``top_k=1`` degenerates to greedy regardless of temperature, so the
 sampled path can be regression-tested against the greedy one.
@@ -30,6 +33,15 @@ def make_prefill_step(model: Model) -> Callable:
     return prefill_step
 
 
+def _check_temperature(temperature: float) -> None:
+    """Single source of truth for the temperature domain check (raised
+    both at ``make_serve_step`` factory time — fail fast, before any
+    compile — and inside ``sample_logits`` for direct callers)."""
+    if temperature <= 0.0:
+        raise ValueError(f"temperature must be > 0, got {temperature} "
+                         "(use greedy=True for argmax decoding)")
+
+
 def sample_logits(logits: jax.Array, key: jax.Array,
                   temperature: float = 1.0,
                   top_k: Optional[int] = None) -> jax.Array:
@@ -41,9 +53,7 @@ def sample_logits(logits: jax.Array, key: jax.Array,
     ``temperature`` scales AFTER the restriction so top_k=1 is exact
     argmax for any temperature.
     """
-    if temperature <= 0.0:
-        raise ValueError(f"temperature must be > 0, got {temperature} "
-                         "(use greedy=True for argmax decoding)")
+    _check_temperature(temperature)
     vocab = logits.shape[-1]
     logits = logits.astype(jnp.float32)
     if top_k is not None and top_k < vocab:
@@ -66,18 +76,24 @@ def make_serve_step(model: Model, greedy: bool = True,
 
         return serve_step
 
-    if temperature <= 0.0:
-        raise ValueError(f"temperature must be > 0, got {temperature} "
-                         "(use greedy=True for argmax decoding)")
+    _check_temperature(temperature)
 
-    def serve_step(params, cache, tokens, pos, key):
+    def serve_step(params, cache, tokens, pos, key, rids=None):
         logits, cache = model.decode_step(params, cache, tokens, pos)
-        # fold the step position (a scalar per serve step; pos arrives
-        # [B, 1]) into the key: re-running a step — or replaying a
-        # trace — at the same pos resamples identically
-        nxt = sample_logits(
-            logits, jax.random.fold_in(key, jnp.reshape(pos, (-1,))[0]),
-            temperature=temperature, top_k=top_k)
+        # per-lane key = fold_in(fold_in(key, request_id), position):
+        # under continuous batching two requests routinely decode at the
+        # SAME position in the same step — folding only the position
+        # would hand them one sample stream.  The (rid, pos) pair keys
+        # every sample uniquely while keeping replays deterministic:
+        # re-running any step of a trace resamples identically.
+        B = logits.shape[0]
+        r = jnp.zeros((B,), jnp.int32) if rids is None \
+            else jnp.asarray(rids, jnp.int32)
+        p = jnp.reshape(pos, (B, -1))[:, 0]
+        keys = jax.vmap(lambda rr, pp: jax.random.fold_in(
+            jax.random.fold_in(key, rr), pp))(r, p)
+        nxt = jax.vmap(lambda lg, k: sample_logits(
+            lg, k, temperature=temperature, top_k=top_k))(logits, keys)
         return logits, nxt, cache
 
     return serve_step

@@ -1,0 +1,388 @@
+"""Continuous-batching decode engine (DESIGN.md §16).
+
+A fixed-capacity slot table turns ragged request traffic into dense,
+fixed-shape device steps:
+
+  admit    arrived requests are right-padded to pow2 prompt lengths on
+           the host, grouped into exact-shape buckets by the §6 planner
+           (``plan_buckets``/``gather_bucket`` on the request dimension
+           — each view is one prompt shaped [1, P]), and each bucket
+           runs ONE ``model.prefill_cache`` launch whose per-request KV
+           rows + first sampled token install into free slots;
+  decode   every engine step runs ONE fixed-shape [slots, 1] decode
+           launch over the whole table; the ``active`` mask keeps
+           retired/free lanes' cache rows bitwise-frozen (dead lanes
+           cost a lane of FLOPs, never correctness);
+  evict    slots free on EOS or ``max_new`` in ascending-slot order, so
+           eviction is deterministic under a seeded trace.
+
+The jit-shape contract (enforced by tests + BENCH_serving.json): the
+decode step compiles at most 2 distinct shapes across an entire run —
+in practice exactly 1, because the slot table never changes shape.
+Prefill compiles one executable per (pow2 admit count, pow2 prompt len)
+bucket, a bounded O(log slots · log max_prompt) set.
+
+Clocking is dual-mode: ``step_dt=None`` measures wall time (the bench),
+a float ``step_dt`` runs a virtual clock where every device launch
+costs one tick (tests + the hardware-independent throughput invariant:
+continuous admission beats static admission on mixed-length traces
+because static convoys — it re-admits only when the WHOLE table has
+drained, idling slots on the longest straggler).
+
+Per-slot sampling keys fold (request id, position) — see
+serving/decode.py — so two requests decoding at the same position never
+share a sample stream and any trace replays bitwise.
+
+The engine serves the KV-cache families (dense, moe).  ssm/hybrid have
+``prefill_cache``/``decode_step`` support for single-stream serving but
+their recurrence caches are not slot-installable here (yet).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import Model
+from repro.optim.bucketing import plan_buckets, gather_bucket
+from repro.serving.decode import _check_temperature, sample_logits
+from repro.serving.loadgen import Request
+
+_MAX_STEPS = 200_000
+
+
+def pow2_pad(n: int, floor: int = 4) -> int:
+    """Smallest power of two >= max(n, floor) — the admission length
+    bucket, bounding prefill executables to one per (count, len) pow2."""
+    p = floor
+    while p < n:
+        p *= 2
+    return p
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    slots: int = 8              # slot-table capacity == decode batch
+    cache_len: int = 64         # per-slot KV length (>= prompt + gen!)
+    greedy: bool = True
+    temperature: float = 1.0
+    top_k: Optional[int] = None
+    eos_id: Optional[int] = None
+    admission: str = "continuous"   # "continuous" | "static"
+    seed: int = 0                   # base PRNG key for sampling
+
+    def __post_init__(self):
+        if self.slots <= 0:
+            raise ValueError(f"slots must be > 0, got {self.slots}")
+        if self.admission not in ("continuous", "static"):
+            raise ValueError(f"unknown admission {self.admission!r}")
+        if not self.greedy:
+            _check_temperature(self.temperature)
+
+
+@dataclasses.dataclass(frozen=True)
+class Completion:
+    rid: int
+    prompt_len: int
+    arrival: float
+    admitted: float
+    finished: float
+    tokens: Tuple[int, ...]     # generated tokens (incl. prefill's first)
+
+    @property
+    def latency(self) -> float:
+        """Full-request latency including queue wait."""
+        return self.finished - self.arrival
+
+    @property
+    def queue_wait(self) -> float:
+        return self.admitted - self.arrival
+
+
+@dataclasses.dataclass(frozen=True)
+class RunResult:
+    completions: Tuple[Completion, ...]
+    occupancy: Tuple[int, ...]  # active slots at each decode step
+    n_decode_steps: int
+    n_prefill_launches: int
+    decode_step_shapes: int     # jit-cache size of the decode step
+    elapsed: float
+
+    @property
+    def generated_tokens(self) -> int:
+        return sum(len(c.tokens) for c in self.completions)
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.generated_tokens / max(self.elapsed, 1e-9)
+
+    def latency_percentiles(self, qs=(50, 99)) -> Dict[str, float]:
+        lats = np.asarray([c.latency for c in self.completions])
+        return {f"p{q}": float(np.percentile(lats, q)) for q in qs}
+
+
+class Engine:
+    """Slot-table continuous-batching engine over one compiled model."""
+
+    def __init__(self, model: Model, params, cfg: EngineConfig):
+        if model.cfg.family not in ("dense", "moe"):
+            raise NotImplementedError(
+                f"Engine serves KV-cache families (dense, moe); "
+                f"{model.cfg.family!r} caches are not slot-installable")
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self._key = jax.random.PRNGKey(cfg.seed)
+
+        def decode(params, cache, tokens, pos, active, key, rids):
+            logits, cache = model.decode_step(params, cache, tokens, pos,
+                                              active=active)
+            lg = logits[:, 0]  # [slots, V]
+            if cfg.greedy:
+                nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+            else:
+                p = jnp.reshape(pos, (pos.shape[0], -1))[:, 0]
+                keys = jax.vmap(lambda r, pp: jax.random.fold_in(
+                    jax.random.fold_in(key, r), pp))(rids, p)
+                nxt = jax.vmap(lambda l, k: sample_logits(
+                    l, k, temperature=cfg.temperature,
+                    top_k=cfg.top_k))(lg, keys)
+            return nxt, cache
+
+        # ONE decode executable for the whole run: the slot table is the
+        # batch, so tokens/pos/active/rids never change shape
+        self._decode = jax.jit(decode, donate_argnums=(1,))
+
+        def prefill(params, tokens, lengths, key, rids):
+            logits, rows = model.prefill_cache(
+                params, {"tokens": tokens}, cfg.cache_len, lengths)
+            lg = logits[:, 0]
+            if cfg.greedy:
+                first = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+            else:
+                # same (rid, pos) fold as decode: prefill's token is the
+                # sample "at" position lengths - 1
+                keys = jax.vmap(lambda r, pp: jax.random.fold_in(
+                    jax.random.fold_in(key, r), pp))(rids, lengths - 1)
+                first = jax.vmap(lambda l, k: sample_logits(
+                    l, k, temperature=cfg.temperature,
+                    top_k=cfg.top_k))(lg, keys)
+            return first, rows
+
+        self._prefill = jax.jit(prefill)
+
+        def install(cache, rows, idx):
+            # filler lanes carry idx == slots: out-of-bounds scatter
+            # indices drop under jit, so pad lanes never land
+            return {
+                "k": cache["k"].at[:, idx].set(rows["k"]),
+                "v": cache["v"].at[:, idx].set(rows["v"]),
+                "kpos": cache["kpos"].at[idx].set(rows["kpos"]),
+            }
+
+        self._install = jax.jit(install, donate_argnums=(0,))
+
+        self.reset()
+
+    # ------------------------------------------------------------ state
+
+    def reset(self):
+        cfg = self.cfg
+        self.cache = self.model.init_cache(cfg.slots, cfg.cache_len)
+        self._rid = np.full(cfg.slots, -1, np.int64)     # -1 == free
+        self._pos = np.zeros(cfg.slots, np.int32)        # next decode pos
+        self._plen = np.zeros(cfg.slots, np.int32)
+        self._max_new = np.zeros(cfg.slots, np.int64)
+        self._toks: List[List[int]] = [[] for _ in range(cfg.slots)]
+        self._meta: Dict[int, Tuple[Request, float]] = {}  # rid -> admit t
+
+    @property
+    def active_mask(self) -> np.ndarray:
+        return self._rid >= 0
+
+    @property
+    def n_active(self) -> int:
+        return int(self.active_mask.sum())
+
+    @property
+    def decode_step_shapes(self) -> int:
+        return int(self._decode._cache_size())
+
+    # -------------------------------------------------------- admission
+
+    def _plan_admission(self, reqs: Sequence[Request]):
+        """§6 planner on the request dimension: each prompt is a [1, P]
+        view at its pow2-padded length; exact-shape buckets become one
+        prefill launch each."""
+        padded = [pow2_pad(r.prompt_len) for r in reqs]
+        for r, p in zip(reqs, padded):
+            if p > self.cfg.cache_len:
+                raise ValueError(
+                    f"request {r.rid}: padded prompt {p} exceeds "
+                    f"cache_len {self.cfg.cache_len}")
+        return plan_buckets([(1, p) for p in padded])
+
+    def admit(self, reqs: Sequence[Request], free: Sequence[int],
+              now: float) -> int:
+        """Admit up to ``len(free)`` requests (FIFO) into free slots;
+        one prefill launch per prompt-length bucket.  Returns launches."""
+        cfg = self.cfg
+        reqs = list(reqs)[:len(free)]
+        if not reqs:
+            return 0
+        launches = 0
+        buckets = self._plan_admission(reqs)
+        # views are globally indexed (Entry.index points into reqs);
+        # each prompt right-pads to its own pow2 bucket length
+        views = [np.pad(r.prompt,
+                        (0, pow2_pad(r.prompt_len) - r.prompt_len)
+                        ).reshape(1, -1).astype(np.int32) for r in reqs]
+        slot_iter = iter(sorted(free)[:len(reqs)])
+        for b in buckets:
+            idxs = [e.index for e in b.entries]
+            take = [reqs[i] for i in idxs]
+            slots = [next(slot_iter) for _ in take]
+            P = b.shape[1]
+            A = pow2_pad(len(take), floor=1)
+            tokens = np.asarray(gather_bucket(b, views)
+                                ).reshape(len(take), P)       # [A_real, P]
+            lengths = np.asarray([r.prompt_len for r in take], np.int32)
+            rids = np.asarray([r.rid for r in take], np.int32)
+            idx = np.asarray(slots, np.int64)
+            if A > len(take):                 # pad lanes: OOB idx drops
+                padn = A - len(take)
+                tokens = np.concatenate(
+                    [tokens, np.repeat(tokens[-1:], padn, 0)])
+                lengths = np.concatenate(
+                    [lengths, np.repeat(lengths[-1:], padn)])
+                rids = np.concatenate([rids, np.repeat(rids[-1:], padn)])
+                idx = np.concatenate(
+                    [idx, np.full(padn, cfg.slots, np.int64)])
+            first, rows = self._prefill(
+                self.params, jnp.asarray(tokens), jnp.asarray(lengths),
+                self._key, jnp.asarray(rids))
+            self.cache = self._install(self.cache, rows, jnp.asarray(idx))
+            first = np.asarray(first)
+            launches += 1
+            for j, (r, s) in enumerate(zip(take, slots)):
+                self._rid[s] = r.rid
+                self._pos[s] = r.prompt_len
+                self._plen[s] = r.prompt_len
+                self._max_new[s] = r.max_new
+                self._toks[s] = [int(first[j])]
+                self._meta[r.rid] = (r, now)
+        return launches
+
+    # ----------------------------------------------------------- decode
+
+    def step(self) -> np.ndarray:
+        """One fixed-shape decode launch over the slot table.  Returns
+        the per-slot next tokens (garbage at inactive lanes)."""
+        cfg = self.cfg
+        active = self.active_mask
+        tokens = np.asarray(
+            [t[-1] if t else 0 for t in self._toks], np.int32)
+        nxt, self.cache = self._decode(
+            self.params, self.cache,
+            jnp.asarray(tokens.reshape(cfg.slots, 1)),
+            jnp.asarray(self._pos.reshape(cfg.slots, 1)),
+            jnp.asarray(active),
+            self._key,
+            jnp.asarray(np.maximum(self._rid, 0).astype(np.int32)))
+        nxt = np.asarray(nxt)
+        for s in range(cfg.slots):
+            if active[s]:
+                self._toks[s].append(int(nxt[s]))
+                self._pos[s] += 1
+        return nxt
+
+    def sweep(self, now: float, out: List[Completion]):
+        """Evict finished slots (EOS or max_new), ascending slot order."""
+        for s in range(self.cfg.slots):
+            rid = self._rid[s]
+            if rid < 0:
+                continue
+            toks = self._toks[s]
+            done = len(toks) >= self._max_new[s] or (
+                self.cfg.eos_id is not None and toks
+                and toks[-1] == self.cfg.eos_id)
+            if done:
+                req, admitted = self._meta.pop(int(rid))
+                out.append(Completion(
+                    rid=int(rid), prompt_len=req.prompt_len,
+                    arrival=req.arrival, admitted=admitted, finished=now,
+                    tokens=tuple(toks)))
+                self._rid[s] = -1
+                self._toks[s] = []
+
+    # -------------------------------------------------------------- run
+
+    def run(self, trace: Sequence[Request],
+            step_dt: Optional[float] = None,
+            prefill_dt: Optional[float] = None) -> RunResult:
+        """Drive a loadgen trace to completion.
+
+        ``step_dt=None``: wall clock (sleeps through idle gaps — the
+        bench's offered-load mode).  A float runs the virtual clock:
+        every decode launch costs ``step_dt``, every prefill launch
+        ``prefill_dt`` (default ``step_dt``) — fully deterministic.
+        """
+        cfg = self.cfg
+        virtual = step_dt is not None
+        if virtual and prefill_dt is None:
+            prefill_dt = step_dt
+        pending = sorted(trace, key=lambda r: (r.arrival, r.rid))
+        done: List[Completion] = []
+        occupancy: List[int] = []
+        n_steps = 0
+        n_prefill = 0
+        vt = 0.0
+        t0 = time.monotonic()
+
+        def now():
+            return vt if virtual else time.monotonic() - t0
+
+        for _ in range(_MAX_STEPS):
+            if not pending and not self.n_active:
+                break
+            t = now()
+            arrived = [r for r in pending if r.arrival <= t]
+            free = [s for s in range(cfg.slots) if self._rid[s] < 0]
+            admit_ok = bool(arrived) and bool(free) and (
+                cfg.admission == "continuous" or self.n_active == 0)
+            if admit_ok:
+                n = min(len(arrived), len(free))
+                launches = self.admit(arrived[:n], free, t)
+                n_prefill += launches
+                pending = pending[n:]
+                if virtual:
+                    vt += launches * prefill_dt
+                # prefill may already satisfy max_new == 1
+                self.sweep(now(), done)
+            if self.n_active:
+                occupancy.append(self.n_active)
+                self.step()
+                n_steps += 1
+                if virtual:
+                    vt += step_dt
+                self.sweep(now(), done)
+            elif pending:
+                nxt_t = pending[0].arrival
+                if virtual:
+                    vt = max(vt, nxt_t)
+                else:
+                    time.sleep(max(0.0, nxt_t - now()))
+        else:
+            raise RuntimeError(f"engine exceeded {_MAX_STEPS} steps "
+                               f"({len(pending)} pending)")
+
+        done.sort(key=lambda c: c.rid)
+        return RunResult(
+            completions=tuple(done), occupancy=tuple(occupancy),
+            n_decode_steps=n_steps, n_prefill_launches=n_prefill,
+            decode_step_shapes=self.decode_step_shapes, elapsed=now())

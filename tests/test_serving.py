@@ -1,0 +1,353 @@
+"""Serving layer tests (DESIGN.md §16): sampling properties, engine
+invariants (slot accounting, bitwise batching-invariance, deterministic
+eviction, the jit-shape contract), one-launch prefill parity, and the
+train -> serve checkpoint handoff."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import hypothesis_or_stub
+
+from repro.configs import get_smoke_config
+from repro.models import build
+from repro.serving import (Engine, EngineConfig, make_trace, pow2_pad,
+                           sample_logits)
+from repro.serving.decode import make_serve_step
+
+given, settings, st = hypothesis_or_stub()
+
+ARCH = "qwen3-14b"
+CLEN = 64
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_smoke_config(ARCH)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _trace(cfg, seed=7, n=10, qps=50.0):
+    return make_trace(seed, n_requests=n, qps=qps,
+                      vocab_size=cfg.vocab_size,
+                      prompt_lens=(3, 5, 8, 12), gen_lens=(2, 4, 6))
+
+
+# ---------------------------------------------------------------- sampling
+
+
+@given(b=st.integers(1, 4), extra=st.integers(0, 1), v=st.integers(2, 37),
+       temp=st.floats(0.05, 4.0), k=st.integers(1, 40), seed=st.integers(0, 99))
+@settings(max_examples=40, deadline=None)
+def test_sample_logits_in_vocab(b, extra, v, temp, k, seed):
+    """Property: samples are int32 and inside the vocab for any leading
+    batch layout, temperature, and top_k (including top_k > vocab)."""
+    rng = np.random.default_rng(seed)
+    shape = (b, 2, v) if extra else (b, v)
+    logits = jnp.asarray(rng.standard_normal(shape) * 3, jnp.float32)
+    out = sample_logits(logits, jax.random.PRNGKey(seed),
+                        temperature=temp, top_k=k)
+    assert out.dtype == jnp.int32
+    assert out.shape == shape[:-1]
+    assert bool(jnp.all((out >= 0) & (out < v)))
+
+
+@given(v=st.integers(2, 50), temp=st.floats(0.05, 9.0),
+       seed=st.integers(0, 99))
+@settings(max_examples=40, deadline=None)
+def test_sample_topk1_is_argmax(v, temp, seed):
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.standard_normal((3, v)) * 5, jnp.float32)
+    out = sample_logits(logits, jax.random.PRNGKey(seed),
+                        temperature=temp, top_k=1)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(jnp.argmax(logits, axis=-1)))
+
+
+@given(seed=st.integers(0, 99), temp=st.floats(0.1, 2.0))
+@settings(max_examples=25, deadline=None)
+def test_sample_replay_deterministic(seed, temp):
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.standard_normal((4, 33)), jnp.float32)
+    key = jax.random.PRNGKey(seed)
+    a = sample_logits(logits, key, temperature=temp, top_k=8)
+    b = sample_logits(logits, key, temperature=temp, top_k=8)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_temperature_domain_single_source(served):
+    """The dedup'd check raises identically from both entry points."""
+    _, model, _ = served
+    with pytest.raises(ValueError, match="temperature must be > 0"):
+        sample_logits(jnp.zeros((2, 8)), jax.random.PRNGKey(0),
+                      temperature=0.0)
+    with pytest.raises(ValueError, match="temperature must be > 0"):
+        make_serve_step(model, greedy=False, temperature=-1.0)
+
+
+def test_serve_step_rid_fold_separates_streams(served):
+    """Two requests decoding at the SAME position must not share a
+    sample stream: same logits + same pos, different rids -> (with
+    overwhelming probability over 64 positions) different samples, and
+    replaying the same (rid, pos) resamples identically."""
+    cfg, model, params = served
+    step = make_serve_step(model, greedy=False, temperature=1.0)
+    cache_a = model.init_cache(2, 16)
+    cache_b = model.init_cache(2, 16)
+    key = jax.random.PRNGKey(3)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    pos = jnp.zeros((2, 1), jnp.int32)
+    seq_a, seq_b = [], []
+    for t in range(8):
+        pos = jnp.full((2, 1), t, jnp.int32)
+        _, na, cache_a = step(params, cache_a, tok, pos, key,
+                              rids=jnp.asarray([0, 0], jnp.int32))
+        _, nb, cache_b = step(params, cache_b, tok, pos, key,
+                              rids=jnp.asarray([0, 7], jnp.int32))
+        seq_a.append(np.asarray(na))
+        seq_b.append(np.asarray(nb))
+    a, b = np.stack(seq_a), np.stack(seq_b)
+    # lane 0 has rid 0 in both runs: identical history -> identical samples
+    np.testing.assert_array_equal(a[:, 0], b[:, 0])
+    # lane 1 differs only by rid -> streams must diverge
+    assert not np.array_equal(a[:, 1], b[:, 1])
+
+
+# ------------------------------------------------------------------ engine
+
+
+def test_engine_slot_accounting_never_leaks(served):
+    cfg, model, params = served
+    trace = _trace(cfg)
+    eng = Engine(model, params, EngineConfig(slots=4, cache_len=CLEN,
+                                             eos_id=0))
+    res = eng.run(trace, step_dt=0.01)
+    # every request completes exactly once, table fully drains
+    assert sorted(c.rid for c in res.completions) == \
+        sorted(r.rid for r in trace)
+    assert eng.n_active == 0
+    assert bool(np.all(eng._rid == -1))
+    assert all(o >= 1 and o <= 4 for o in res.occupancy)
+    assert len(res.occupancy) == res.n_decode_steps
+    for c in res.completions:
+        req = trace[c.rid]
+        assert 1 <= len(c.tokens) <= req.max_new
+        assert all(0 <= t < cfg.vocab_size for t in c.tokens)
+        if len(c.tokens) < req.max_new:   # early exit must be EOS
+            assert c.tokens[-1] == 0
+
+
+def test_engine_bitwise_matches_single_request_loop(served):
+    """The §16 batching-invariance claim, bitwise: every request decoded
+    through the shared slot table (other lanes active, padded admission
+    lanes, retired neighbors) produces the IDENTICAL token sequence as a
+    batch-1 loop over the same model."""
+    cfg, model, params = served
+    trace = _trace(cfg)
+    eng = Engine(model, params, EngineConfig(slots=4, cache_len=CLEN,
+                                             eos_id=0))
+    res = eng.run(trace, step_dt=0.01)
+
+    pf = jax.jit(lambda p, t, ln: model.prefill_cache(
+        p, {"tokens": t}, CLEN, ln))
+    step = jax.jit(lambda p, c, t, pos, a: model.decode_step(
+        p, c, t, pos, active=a))
+    for r in trace:
+        P = pow2_pad(r.prompt_len)
+        toks = np.pad(r.prompt, (0, P - r.prompt_len)).reshape(1, P)
+        logits, cache = pf(params, jnp.asarray(toks),
+                           jnp.asarray([r.prompt_len], np.int32))
+        out = [int(jnp.argmax(logits[:, 0], axis=-1)[0])]
+        pos = r.prompt_len
+        while len(out) < r.max_new and out[-1] != 0:
+            lg, cache = step(params, cache,
+                             jnp.asarray([[out[-1]]], jnp.int32),
+                             jnp.asarray([[pos]], jnp.int32),
+                             jnp.asarray([True]))
+            out.append(int(jnp.argmax(lg[:, 0, :], axis=-1)[0]))
+            pos += 1
+        got = next(c for c in res.completions if c.rid == r.rid).tokens
+        assert tuple(out) == got, f"rid {r.rid}: {out} != {got}"
+
+
+def test_engine_inactive_slots_bitwise_frozen(served):
+    """Retired/free lanes' cache rows survive decode steps bitwise —
+    the active-mask plumbing, checked leaf-for-leaf."""
+    cfg, model, params = served
+    cache = model.init_cache(3, 16)
+    step = jax.jit(lambda p, c, t, pos, a: model.decode_step(
+        p, c, t, pos, active=a))
+    tok = jnp.asarray([[5], [6], [7]], jnp.int32)
+    for t in range(3):   # warm the caches with an all-active phase
+        pos = jnp.full((3, 1), t, jnp.int32)
+        _, cache = step(params, cache, tok, pos,
+                        jnp.asarray([True, True, True]))
+    before = jax.tree.map(np.asarray, cache)
+    _, cache = step(params, cache, tok, jnp.full((3, 1), 3, jnp.int32),
+                    jnp.asarray([True, False, True]))
+    after = jax.tree.map(np.asarray, cache)
+    for leaf_b, leaf_a in zip(jax.tree.leaves(before),
+                              jax.tree.leaves(after)):
+        ax = 0 if leaf_b.ndim == 2 else 1   # kpos [B, clen] vs k/v [L,B,..]
+        np.testing.assert_array_equal(np.take(leaf_b, 1, axis=ax),
+                                      np.take(leaf_a, 1, axis=ax))
+    # the active lanes did write
+    assert not np.array_equal(before["kpos"][0], after["kpos"][0])
+
+
+def test_engine_deterministic_eviction_and_replay(served):
+    cfg, model, params = served
+    trace = _trace(cfg, seed=11, n=12, qps=80.0)
+    mk = lambda: Engine(model, params, EngineConfig(
+        slots=4, cache_len=CLEN, eos_id=0))
+    r1 = mk().run(trace, step_dt=0.01)
+    r2 = mk().run(trace, step_dt=0.01)
+    # identical completion ORDER (eviction order) and timings, bitwise
+    order1 = sorted(r1.completions, key=lambda c: (c.finished, c.rid))
+    order2 = sorted(r2.completions, key=lambda c: (c.finished, c.rid))
+    assert [c.rid for c in order1] == [c.rid for c in order2]
+    for a, b in zip(r1.completions, r2.completions):
+        assert a == b
+    assert r1.occupancy == r2.occupancy
+
+
+def test_engine_jit_shape_contract(served):
+    """The decode step compiles at most 2 distinct shapes across a whole
+    mixed-length run — in practice exactly 1 ([slots, 1] never varies)."""
+    cfg, model, params = served
+    eng = Engine(model, params, EngineConfig(slots=4, cache_len=CLEN,
+                                             eos_id=0))
+    res = eng.run(_trace(cfg, seed=3, n=12, qps=60.0), step_dt=0.01)
+    assert res.decode_step_shapes <= 2
+    assert res.decode_step_shapes == 1
+
+
+def test_engine_continuous_beats_static(served):
+    """The BENCH_serving.json throughput invariant, at test scale: on a
+    mixed-length seeded trace, continuous admission strictly out-runs
+    static (admit-only-when-drained) batching on the virtual clock."""
+    cfg, model, params = served
+    trace = _trace(cfg, seed=5, n=12, qps=100.0)
+    run = lambda adm: Engine(model, params, EngineConfig(
+        slots=4, cache_len=CLEN, eos_id=0, admission=adm)).run(
+            trace, step_dt=0.01)
+    cont, stat = run("continuous"), run("static")
+    assert cont.generated_tokens == stat.generated_tokens
+    assert cont.tokens_per_s > stat.tokens_per_s
+    assert cont.n_decode_steps < stat.n_decode_steps
+
+
+def test_engine_rejects_unservable_families(served):
+    cfg, model, params = served
+    hy = build(get_smoke_config("recurrentgemma-2b"))
+    with pytest.raises(NotImplementedError, match="slot-installable"):
+        Engine(hy, None, EngineConfig(slots=2, cache_len=16))
+    with pytest.raises(ValueError, match="admission"):
+        EngineConfig(slots=2, cache_len=16, admission="magic")
+
+
+# ----------------------------------------------------------- prefill parity
+
+
+@pytest.mark.parametrize("arch", ["qwen3-14b", "mixtral-8x7b"])
+def test_prefill_cache_matches_streamed_decode(arch):
+    """One-launch ragged prefill == streamed active-masked decode loop,
+    within bf16 flash-vs-direct softmax noise; kpos bitwise."""
+    cfg = get_smoke_config(arch)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 3, 12
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    lengths = jnp.asarray([12, 7, 3], jnp.int32)
+    lp, cp = jax.jit(model.prefill_cache, static_argnums=(2,))(
+        params, {"tokens": toks}, 24, lengths)
+    cache = model.init_cache(B, 24)
+    step = jax.jit(lambda p, c, t, pos, a: model.decode_step(
+        p, c, t, pos, active=a))
+    last = jnp.zeros_like(lp)
+    for t in range(S):
+        lg, cache = step(params, cache, toks[:, t:t + 1],
+                         jnp.full((B, 1), t, jnp.int32), t < lengths)
+        last = jnp.where((t == lengths - 1).reshape(B, 1, 1), lg, last)
+    np.testing.assert_array_equal(np.asarray(cp["kpos"]),
+                                  np.asarray(cache["kpos"]))
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(last),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_prefill_cache_scan_fallback_bitwise():
+    """ssm prefill (scan of decode_step) is bitwise-identical to the
+    streamed loop it replaces."""
+    cfg = get_smoke_config("falcon-mamba-7b")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 10
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    lengths = jnp.asarray([10, 4], jnp.int32)
+    lp, cp = jax.jit(model.prefill_cache, static_argnums=(2,))(
+        params, {"tokens": toks}, 16, lengths)
+    cache = model.init_cache(B, 16)
+    step = jax.jit(lambda p, c, t, pos, a: model.decode_step(
+        p, c, t, pos, active=a))
+    last = jnp.zeros_like(lp)
+    for t in range(S):
+        lg, cache = step(params, cache, toks[:, t:t + 1],
+                         jnp.full((B, 1), t, jnp.int32), t < lengths)
+        last = jnp.where((t == lengths - 1).reshape(B, 1, 1), lg, last)
+    np.testing.assert_array_equal(np.asarray(lp), np.asarray(last))
+    for a, b in zip(jax.tree.leaves(cp), jax.tree.leaves(cache)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ----------------------------------------------------- checkpoint handoff
+
+
+def test_checkpoint_to_serve_handoff(tmp_path):
+    """Train 3 steps, checkpoint, restore params into the engine, serve
+    a trace to completion; a corrupted newest MANIFEST falls back to the
+    older verifying step per §15."""
+    from repro.checkpoint import restore_params
+    from repro.config import (OptimizerConfig, PrismConfig, TrainConfig)
+    from repro.data import DataConfig
+    from repro.train import Trainer
+
+    cfg = get_smoke_config("gpt2-paper")
+    model = build(cfg)
+    ocfg = OptimizerConfig(name="muon", learning_rate=0.02,
+                           prism=PrismConfig(degree=2, iterations=3,
+                                             warm_alpha_iters=3,
+                                             sketch_dim=8))
+    tcfg = TrainConfig(steps=3, checkpoint_dir=str(tmp_path),
+                       checkpoint_every=1, log_every=100,
+                       async_checkpoint=False)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                      global_batch=4, markov_rank=8)
+    Trainer(model, ocfg, tcfg, dcfg).run()
+
+    step, params = restore_params(str(tmp_path), model.param_shapes())
+    assert step == 3
+    eng = Engine(model, params, EngineConfig(slots=2, cache_len=32,
+                                             eos_id=None))
+    trace = make_trace(1, n_requests=4, qps=100.0,
+                       vocab_size=cfg.vocab_size,
+                       prompt_lens=(3, 6), gen_lens=(2, 4))
+    res = eng.run(trace, step_dt=0.01)
+    assert len(res.completions) == 4
+    assert all(0 <= t < cfg.vocab_size
+               for c in res.completions for t in c.tokens)
+
+    # §15: corrupt the newest step's payload -> handoff falls back
+    npz = os.path.join(str(tmp_path), "step_00000003", "tree.npz")
+    raw = bytearray(open(npz, "rb").read())
+    raw[len(raw) // 2] ^= 0xFF
+    open(npz, "wb").write(bytes(raw))
+    step2, params2 = restore_params(str(tmp_path), model.param_shapes())
+    assert step2 < 3
+    lg, _ = jax.jit(model.prefill_cache, static_argnums=(2,))(
+        params2, {"tokens": jnp.zeros((1, 4), jnp.int32)}, 8, None)
+    assert bool(jnp.all(jnp.isfinite(lg[..., :cfg.vocab_size])))
